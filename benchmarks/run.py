@@ -1,0 +1,38 @@
+"""Benchmark harness — one bench per paper table/figure (+ framework extras).
+
+Prints ``name,us_per_call,derived`` CSV, per the repo contract:
+
+- ``paper_fig2_memory_*``   — Fig. 2: memory vs batch, fp32 vs mixed
+- ``paper_fig3_steptime_*`` — Fig. 3: step time vs batch, fp32 vs mixed
+- ``loss_scaling_*``        — §3.3: dynamic-scaling overhead + fused kernel
+- ``attention_*``           — blocked-vs-plain attention (memory roofline)
+
+Run: ``PYTHONPATH=src python -m benchmarks.run``
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (attention_bench, loss_scaling_bench,
+                            paper_memory, paper_steptime)
+    modules = [paper_memory, paper_steptime, loss_scaling_bench,
+               attention_bench]
+    print("name,us_per_call,derived")
+    failed = False
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001 — report all benches
+            traceback.print_exc()
+            failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

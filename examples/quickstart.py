@@ -1,0 +1,72 @@
+"""MPX quickstart — the paper's API end to end on a small MLP.
+
+Mirrors the paper's Example 2: the ONLY changes vs a full-precision pipeline
+are (1) `mpx.filter_grad(loss, loss_scaling)` instead of a plain grad, and
+(2) `mpx.optimizer_update(...)` instead of update+apply.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import mpx
+from repro.optim import adamw
+
+
+def init_mlp(key, sizes):
+    params = []
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        params.append({"w": jax.random.normal(sub, (din, dout)) / din ** 0.5,
+                       "b": jnp.zeros(dout)})
+    return params
+
+
+def forward(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.gelu(x)
+    return x
+
+
+def loss_fn(model, batch):
+    pred = forward(model, batch["x"])
+    # sums/means are overflow-prone in fp16 -> force full precision (paper §3.2)
+    return mpx.force_full_precision(jnp.mean)((pred - batch["y"]) ** 2)
+
+
+def main():
+    # fp16 like the paper's GPUs; dynamic loss scaling is then load-bearing
+    mpx.set_half_dtype(jnp.float16)
+    key = jax.random.key(0)
+    model = init_mlp(key, [32, 128, 128, 1])
+    optimizer = adamw(learning_rate=1e-3, weight_decay=0.0)
+    opt_state = optimizer.init(model)
+    loss_scaling = mpx.DynamicLossScaling(2.0 ** 15, period=200)
+
+    x = jax.random.normal(jax.random.key(1), (256, 32))
+    y = jnp.sum(jnp.sin(x), axis=-1, keepdims=True)
+    batch = {"x": x, "y": y}
+
+    @mpx.filter_jit
+    def train_step(model, opt_state, loss_scaling, batch):
+        # --- the paper's Example 2(b), verbatim shape ---
+        loss_scaling, grads_finite, grads = mpx.filter_grad(
+            loss_fn, loss_scaling)(model, batch)
+        model, opt_state = mpx.optimizer_update(
+            model, optimizer, opt_state, grads, grads_finite)
+        return model, opt_state, loss_scaling
+
+    for step in range(200):
+        model, opt_state, loss_scaling = train_step(model, opt_state,
+                                                    loss_scaling, batch)
+        if (step + 1) % 50 == 0:
+            print(f"step {step+1:4d}  loss={float(loss_fn(model, batch)):.4f}"
+                  f"  scale={float(loss_scaling.loss_scaling):.0f}")
+    mpx.set_half_dtype(jnp.bfloat16)
+    print("done — mixed-precision fp16 training with dynamic loss scaling")
+
+
+if __name__ == "__main__":
+    main()

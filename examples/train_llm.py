@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter llama-style LM.
+
+Exercises the full production stack on real (synthetic-corpus) data:
+unified transformer, MPX mixed precision + dynamic loss scaling, AdamW with
+warmup-cosine schedule, sharded state (single-device mesh here; the same
+code drives the 16×16 pod), checkpoint/resume, prefetching pipeline.
+
+~100M params: 12L × d768 × 12H × ff2048, 32k vocab.
+
+Run: PYTHONPATH=src python examples/train_llm.py --steps 300
+(CPU: ~1-2 s/step at the default batch; use --steps 20 for a quick pass.)
+Kill and relaunch with the same --ckpt-dir to see fault-tolerant resume.
+"""
+import argparse
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import MemmapTokens, SyntheticTokens, make_token_file
+from repro.launch.mesh import single_device_mesh
+from repro.models import transformer as T
+from repro.optim import adamw, linear_warmup_cosine
+from repro.optim.optimizers import Optimizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+LLM_100M = ModelConfig(
+    name="llm-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32000,
+    pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+    rope_theta=10000.0, tie_embeddings=True, remat="none",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/mpx_llm_100m")
+    ap.add_argument("--corpus", default=None,
+                    help="path to an int32 token file (default: generated)")
+    args = ap.parse_args()
+
+    cfg = LLM_100M
+    print(f"model: {T.count_params(cfg)/1e6:.0f}M params")
+    run = RunConfig(learning_rate=3e-4, grad_accum=1, scaling_period=500)
+    sched = linear_warmup_cosine(run.learning_rate, warmup_steps=50,
+                                 total_steps=args.steps)
+    optimizer = adamw(schedule=sched, weight_decay=run.weight_decay)
+
+    if args.corpus:
+        data = MemmapTokens(args.corpus, batch=args.batch, seq=args.seq)
+    else:
+        path = make_token_file("/tmp/mpx_corpus.bin", 2_000_000,
+                               vocab=cfg.vocab_size, seed=1)
+        data = MemmapTokens(path, batch=args.batch, seq=args.seq)
+
+    trainer = Trainer(cfg, run, optimizer, data,
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                                    log_every=10, watchdog_s=300.0),
+                      mesh=single_device_mesh())
+    history = trainer.fit()
+    if history:
+        print(f"\nfirst logged loss {history[0]['loss']:.3f} -> "
+              f"last {history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+
+Run after the dry-run matrix:
+    PYTHONPATH=src python -m repro.analysis.roofline [--mesh 16x16]
+Prints the §Roofline table (all three terms, dominant bottleneck, model
+FLOPs, usefulness ratio, roofline MFU) and the §Dry-run memory table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+ARCH_ORDER = ["llama3-8b", "gemma2-2b", "starcoder2-3b", "qwen1.5-32b",
+              "mixtral-8x7b", "phi3.5-moe-42b-a6.6b", "recurrentgemma-9b",
+              "hubert-xlarge", "phi-3-vision-4.2b", "mamba2-130m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, optimized: bool = False) -> list[dict]:
+    recs = []
+    for p in sorted(RESULTS.glob(f"*@{mesh}.json")):
+        if p.name.startswith("OPT_") != optimized:
+            continue
+        recs.append(json.loads(p.read_text()))
+    recs.sort(key=lambda r: (ARCH_ORDER.index(r["arch"])
+                             if r["arch"] in ARCH_ORDER else 99,
+                             SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 0.1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "MODEL_FLOPS | useful | MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:70]
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            lines[-1] = lines[-1][:-1] + f" {reason} |" if False else lines[-1]
+            continue
+        rf = r["roofline"]
+        useful = rf.get("useful_ratio")
+        mfu = rf.get("mfu")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant']} | {rf['model_flops']:.2e} | "
+            f"{useful*100:.0f}% | {mfu*100:.1f}% |"
+            if useful else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant']} | — | — | — |")
+    return "\n".join(lines)
+
+
+def memory_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | args GiB/dev | temp GiB/dev | total | fits 16G? |"
+        " collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | {r.get('reason','')[:50]} |")
+            continue
+        m = r["memory"]
+        a, t = m["argument_bytes"] / 2**30, m["temp_bytes"] / 2**30
+        tot = a + t
+        colls = ", ".join(f"{k}×{v['count']}"
+                          for k, v in r.get("collectives", {}).items())
+        lines.append(f"| {r['arch']} | {r['shape']} | {a:.2f} | {t:.2f} | "
+                     f"{tot:.2f} | {'YES' if tot <= 16 else 'no'} | "
+                     f"{colls} |")
+    return "\n".join(lines)
+
+
+def perf_table(mesh: str) -> str:
+    """Before/after for the hillclimbed cells (OPT_*.json vs baseline)."""
+    opt = {(r["arch"], r["shape"]): r for r in load(mesh, optimized=True)}
+    if not opt:
+        return "(no optimized cells recorded)"
+    base = {(r["arch"], r["shape"]): r for r in load(mesh)}
+    lines = ["| cell | variant | compute | memory | collective | MFU | "
+             "fits 16G? |", "|---|---|---|---|---|---|---|"]
+    for key, ro in opt.items():
+        for tag, r in (("baseline", base.get(key)), ("optimized", ro)):
+            if r is None or r["status"] != "ok":
+                continue
+            rf, m = r["roofline"], r["memory"]
+            tot = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+            lines.append(
+                f"| {key[0]} {key[1]} | {tag} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"{rf['mfu']*100:.1f}% | "
+                f"{'YES' if tot <= 16 else f'{tot:.0f}GiB'} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    recs = load(args.mesh)
+    print(f"## Roofline — mesh {args.mesh} ({len(recs)} cells)\n")
+    print(roofline_table(recs))
+    print(f"\n## Memory / dry-run — mesh {args.mesh}\n")
+    print(memory_table(recs))
+    print(f"\n## Hillclimbed cells — mesh {args.mesh}\n")
+    print(perf_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Checkpointing: atomic, async-capable, elastic (mesh-independent) restore.
+
+Layout of one checkpoint::
+
+    <dir>/step_000123/
+        manifest.json        # treedef, shapes, dtypes, step, extra metadata
+        leaf_00000.npy ...   # one file per array leaf (np.save format)
+    <dir>/LATEST             # text file: "step_000123" (atomic rename)
+
+Design points for fleet-scale operation:
+
+- **Atomicity**: written to ``step_N.tmp`` then ``os.rename``d; the LATEST
+  pointer is only updated after the rename, so a preemption mid-write can
+  never corrupt the restore path.
+- **Elasticity**: leaves are stored *unsharded* (fully replicated values are
+  gathered by ``np.asarray``); restore ``device_put``s onto whatever
+  sharding tree the *new* job derives from its own mesh — a 512-chip
+  checkpoint restores onto 256 chips (or 1 CPU) unchanged.  This is the
+  restart-based elastic-scaling story in DESIGN.md §5.
+- **Async**: ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes files on a background thread, overlapping the next train steps.
+- **GC**: ``keep_n`` newest checkpoints survive.
+
+Scaling note (documented limitation): at true multi-pod scale one would
+write per-host shard files (à la Orbax/TensorStore); the manifest format
+here has a ``shards`` field reserved for that extension.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaves_and_treedef(tree):
+    return jax.tree.flatten(tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: PyTree, extra: Optional[dict] = None):
+        """Synchronous atomic save."""
+        self.wait()
+        self._write(step, *self._snapshot(tree), extra or {})
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[dict] = None):
+        """Snapshot now (host copy), write in the background."""
+        self.wait()
+        leaves, treedef = self._snapshot(tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, leaves, treedef, extra or {}),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _snapshot(self, tree):
+        leaves, treedef = _leaves_and_treedef(tree)
+        host = [np.asarray(leaf) for leaf in leaves]   # gathers if sharded
+        return host, treedef
+
+    def _write(self, step: int, leaves, treedef, extra: dict):
+        name = f"step_{step:09d}"
+        tmp = self.dir / (name + ".tmp")
+        final = self.dir / name
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for i, leaf in enumerate(leaves):
+            np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "shapes": [list(np.shape(x)) for x in leaves],
+            "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+            "shards": None,     # reserved: per-host shard files at pod scale
+            "extra": extra,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # atomic LATEST update
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(name)
+        os.rename(latest_tmp, self.dir / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        ckpts = sorted(p for p in self.dir.iterdir()
+                       if p.is_dir() and p.name.startswith("step_")
+                       and not p.name.endswith(".tmp"))
+        for stale in ckpts[:-self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(stale)
+
+    # ------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        return int(latest.read_text().strip().split("_")[1])
+
+    def restore(self, abstract_tree: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None) -> tuple[PyTree, dict]:
+        """Restore onto the structure of ``abstract_tree``.
+
+        ``shardings`` (optional NamedSharding tree) re-shards every leaf for
+        the *current* mesh — the elastic-restart path.  Returns
+        ``(tree, extra_metadata)``.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        path = self.dir / f"step_{step:09d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        _, treedef = _leaves_and_treedef(abstract_tree)
+        if manifest["n_leaves"] != treedef.num_leaves:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, "
+                f"state needs {treedef.num_leaves} — architecture mismatch")
+        leaves = [np.load(path / f"leaf_{i:05d}.npy")
+                  for i in range(manifest["n_leaves"])]
+        if shardings is not None:
+            sh_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            leaves = [jax.device_put(leaf, sh)
+                      for leaf, sh in zip(leaves, sh_leaves)]
+        else:
+            leaves = [jax.device_put(leaf) for leaf in leaves]
+        return jax.tree.unflatten(treedef, leaves), manifest.get("extra", {})

@@ -1,0 +1,35 @@
+"""gemma2-2b — local/global alternating attention, logit softcaps.
+[arXiv:2408.00118; hf:google/gemma-2-2b]
+
+26L, d_model 2304, 8 heads (GQA kv=4, head_dim 256), d_ff 9216 (GeGLU),
+vocab 256000, window 4096 on local layers, attn softcap 50, final softcap
+30, pre+post norms, embeddings scaled by sqrt(d), tied unembedding.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab_size=256000,
+    pattern=("local_attn", "attn"), window=4096,
+    mlp="geglu", norm="rmsnorm", post_norm=True,
+    attn_softcap=50.0, final_softcap=30.0,
+    rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+    # 8 heads don't split 16-way TP.  Sequence sharding won the §Perf
+    # rollout (head_dim sharding psums S² scores: mem 22.4->3.9s,
+    # coll 16.9->6.7s, MFU 1.5->4.9%).
+    rules_overrides=(("seq", "model"),),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b-smoke", family="dense",
+        n_layers=4, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=96, vocab_size=256,
+        pattern=("local_attn", "attn"), window=8,
+        mlp="geglu", norm="rmsnorm", post_norm=True,
+        attn_softcap=50.0, final_softcap=30.0,
+        rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+        remat="none",
+    )

@@ -1,0 +1,34 @@
+"""hubert-xlarge — encoder-only audio transformer (w2v2 architecture).
+[arXiv:2106.07447]
+
+48L, d_model 1280, 16 MHA heads (head_dim 80), d_ff 5120 (GELU+bias),
+LayerNorm, bidirectional.  Masked-prediction head over 504 cluster units.
+
+The convolutional waveform frontend is a STUB per the brief:
+``input_specs()`` supplies precomputed (B, T, 1280) frame embeddings
+(which, in the real model, also carry the conv positional information —
+hence no RoPE in the backbone).  Encoder-only => decode cells are skipped.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    pattern=("attn",), mlp="gelu", mlp_bias=True, norm="layernorm",
+    qkv_bias=True, out_bias=True, causal=False,
+    rope_theta=0.0, tie_embeddings=False,
+    frontend="frames", frontend_dim=1280,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke", family="audio",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=64,
+        pattern=("attn",), mlp="gelu", mlp_bias=True, norm="layernorm",
+        qkv_bias=True, out_bias=True, causal=False,
+        rope_theta=0.0, tie_embeddings=False,
+        frontend="frames", frontend_dim=32, remat="none",
+    )

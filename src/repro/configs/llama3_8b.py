@@ -1,0 +1,24 @@
+"""llama3-8b — dense GQA decoder, 128k vocab. [arXiv:2407.21783]
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), d_ff 14336 (SwiGLU),
+vocab 128256, RoPE theta 500k, RMSNorm, untied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=128256,
+    pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+    rope_theta=500000.0, tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+        rope_theta=500000.0, tie_embeddings=False, remat="none",
+    )

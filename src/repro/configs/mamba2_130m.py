@@ -1,0 +1,28 @@
+"""mamba2-130m — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]
+
+24L of pure SSD blocks (no MLP: d_ff=0), d_model 768, d_inner 1536
+(expand=2), 24 SSD heads × headdim 64, state 128, conv width 4, chunk 256,
+vocab 50280, tied embeddings.  Constant-size decode state => long_500k runs.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    pattern=("ssd",), mlp="none", norm="rmsnorm",
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+    conv_width=4, rope_theta=0.0, tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m-smoke", family="ssm",
+        n_layers=3, d_model=48, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=256,
+        pattern=("ssd",), mlp="none", norm="rmsnorm",
+        ssm_state=16, ssm_headdim=24, ssm_expand=2, ssm_chunk=8,
+        conv_width=4, rope_theta=0.0, tie_embeddings=True, remat="none",
+    )

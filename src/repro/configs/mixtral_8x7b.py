@@ -1,0 +1,34 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention.
+[arXiv:2401.04088; hf:mistralai/Mixtral-8x7B-v0.1]
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), expert d_ff 14336
+(SwiGLU), vocab 32000, SWA window 4096 on every layer — which bounds the
+decode KV cache and makes the long_500k cell runnable.
+
+Expert parallelism: 8 experts don't divide the 16-way model axis, so the
+rule table TP-shards d_ff (14336) inside each expert instead (moe_mlp ->
+model) — automatic via divisibility fallback.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000,
+    pattern=("local_attn",), window=4096,
+    mlp="swiglu", norm="rmsnorm",
+    moe_experts=8, moe_top_k=2, capacity_factor=1.25,
+    rope_theta=1000000.0, tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b-smoke", family="moe",
+        n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=256,
+        pattern=("local_attn",), window=8,
+        mlp="swiglu", norm="rmsnorm",
+        moe_experts=4, moe_top_k=2, capacity_factor=2.0,
+        rope_theta=1000000.0, tie_embeddings=False, remat="none",
+    )

@@ -1,0 +1,29 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE.
+[hf:microsoft/Phi-3.5-MoE-instruct]
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), expert d_ff 6400,
+vocab 32064, full attention.  16 experts divide the 16-way model axis
+exactly — this config exercises *pure expert parallelism* (one expert per
+TP shard), in contrast to mixtral's TP-inside-expert fallback.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size=32064,
+    pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+    moe_experts=16, moe_top_k=2, capacity_factor=1.25,
+    rope_theta=10000.0, tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi3.5-moe-smoke", family="moe",
+        n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=256,
+        pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+        moe_experts=8, moe_top_k=2, capacity_factor=2.0,
+        rope_theta=10000.0, tie_embeddings=False, remat="none",
+    )

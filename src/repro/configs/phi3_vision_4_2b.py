@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b — phi3-mini LM backbone + CLIP frontend (stubbed).
+[hf:microsoft/Phi-3-vision-128k-instruct]
+
+32L, d_model 3072, 32 MHA heads (kv=32, head_dim 96), d_ff 8192 (SwiGLU),
+vocab 32064.  The CLIP ViT-L/14 image tower is a STUB per the brief:
+``input_specs()`` supplies precomputed (B, 576, 1024) patch embeddings,
+projected and prepended to the token sequence; logits cover text positions.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab_size=32064,
+    pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+    rope_theta=10000.0, tie_embeddings=False,
+    frontend="patches", frontend_dim=1024,
+    # head_dim 96 = 16×6 divides the model axis; 32 heads also divide —
+    # default rules shard heads.
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-smoke", family="vlm",
+        n_layers=2, d_model=48, n_heads=4, n_kv_heads=4, head_dim=12,
+        d_ff=96, vocab_size=256,
+        pattern=("attn",), mlp="swiglu", norm="rmsnorm",
+        rope_theta=10000.0, tie_embeddings=False,
+        frontend="patches", frontend_dim=24, remat="none",
+    )

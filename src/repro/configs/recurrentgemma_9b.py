@@ -1,0 +1,36 @@
+"""recurrentgemma-9b — Griffin: RG-LRU + local attention, 2:1 pattern.
+[arXiv:2402.19427]
+
+38L in repeating (RG-LRU, RG-LRU, local-attn) triples (12 full groups + 2
+remainder RG-LRU layers), d_model 4096, attention layers use 16 heads with
+MQA (kv=1, head_dim 256) and a 2048-token window, d_ff 12288 (GeGLU),
+vocab 256000, embeddings scaled by sqrt(d) and tied.  RG-LRU width equals
+d_model (as in the released recurrentgemma configs).
+
+Constant-size recurrent state + bounded attention window => the long_500k
+cell runs for this arch.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12288, vocab_size=256000,
+    pattern=("rglru", "rglru", "local_attn"), window=2048,
+    mlp="geglu", norm="rmsnorm",
+    d_rnn=4096, conv_width=4,
+    rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", family="hybrid",
+        n_layers=5, d_model=48, n_heads=4, n_kv_heads=1, head_dim=12,
+        d_ff=96, vocab_size=256,
+        pattern=("rglru", "rglru", "local_attn"), window=8,
+        mlp="geglu", norm="rmsnorm",
+        d_rnn=48, conv_width=4,
+        rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+        remat="none",
+    )

@@ -1,0 +1,103 @@
+"""The assigned input-shape set (per arch) + batch construction.
+
+Four shapes per LM-family architecture:
+
+- ``train_4k``:    seq 4,096  × global batch 256   (train_step)
+- ``prefill_32k``: seq 32,768 × global batch 32    (forward / encoder pass)
+- ``decode_32k``:  KV cache 32,768, batch 128      (serve_step, one token)
+- ``long_500k``:   KV cache 524,288, batch 1       (serve_step; sub-quadratic
+                   archs only — see ``cell_status``)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (dry-run; no allocation).  ``make_batch`` materializes a
+deterministic synthetic batch of the same structure at arbitrary (reduced)
+sizes for smoke tests and real CPU training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+#: VLM patch-grid stand-in (phi-3-vision: 336px/14 = 576 patches + cls).
+VLM_PATCHES = 576
+
+
+def cell_status(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch × shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and not cfg.supports_decode():
+        return False, f"{cfg.family}: encoder-only / no autoregressive step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return False, ("pure full-attention KV cache is unbounded at 500k; "
+                       "per brief, long_500k runs only for SSM/hybrid/"
+                       "windowed archs")
+    return True, ""
+
+
+def token_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs of one training/prefill batch for this arch."""
+    i32 = jnp.int32
+    if cfg.frontend == "frames":
+        dim = cfg.frontend_dim or cfg.d_model
+        return {"features": jax.ShapeDtypeStruct((batch, seq, dim),
+                                                 jnp.float32),
+                "targets": jax.ShapeDtypeStruct((batch, seq), i32)}
+    out = {"inputs": jax.ShapeDtypeStruct((batch, seq), i32),
+           "targets": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if cfg.frontend == "patches":
+        dim = cfg.frontend_dim or cfg.d_model
+        out["patches"] = jax.ShapeDtypeStruct((batch, VLM_PATCHES, dim),
+                                              jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Dry-run input stand-ins for the given cell.
+
+    ``train``/``prefill`` -> the token batch; ``decode`` -> one-token batch
+    (the KV cache is a separate lowering argument built by the launcher).
+    """
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                               jnp.int32)}
+    return token_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """Deterministic synthetic batch (smoke tests / CPU training)."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.frontend == "frames":
+        dim = cfg.frontend_dim or cfg.d_model
+        return {"features": jax.random.normal(k1, (batch, seq, dim)),
+                "targets": jax.random.randint(k2, (batch, seq), 0,
+                                              cfg.vocab_size)}
+    out = {"inputs": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+           "targets": jax.random.randint(k2, (batch, seq), 0,
+                                         cfg.vocab_size)}
+    if cfg.frontend == "patches":
+        dim = cfg.frontend_dim or cfg.d_model
+        n_p = min(VLM_PATCHES, max(4, seq // 4))
+        out["patches"] = jax.random.normal(k3, (batch, n_p, dim))
+    return out

@@ -1,0 +1,35 @@
+"""starcoder2-3b — GQA kv=2, RoPE, GELU MLP with biases, LayerNorm.
+[arXiv:2402.19173; hf:bigcode/starcoder2-3b]
+
+30L, d_model 3072, 24 heads (GQA kv=2, head_dim 128), d_ff 12288,
+vocab 49152, tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, head_dim=128,
+    d_ff=12288, vocab_size=49152,
+    pattern=("attn",), mlp="gelu", mlp_bias=True, norm="layernorm",
+    qkv_bias=True, out_bias=True,
+    rope_theta=999999.0, tie_embeddings=True,
+    # 24 heads don't split the 16-way model axis.  Baseline used
+    # head_dim->model (contraction-sharded attention: psums of (B,H,S,S)
+    # scores, measured collective-bound at 50.5s — EXPERIMENTS.md §Perf
+    # iter B).  Sequence sharding instead: activations shard on seq over
+    # the model axis, attention q is seq-local against all-gathered K/V
+    # (GQA kv=2 makes the gather tiny), MLP runs seq-sharded with weight
+    # all-gathers — no S² psums anywhere.
+    rules_overrides=(("seq", "model"),),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-3b-smoke", family="dense",
+        n_layers=3, d_model=48, n_heads=6, n_kv_heads=2, head_dim=8,
+        d_ff=96, vocab_size=256,
+        pattern=("attn",), mlp="gelu", mlp_bias=True, norm="layernorm",
+        qkv_bias=True, out_bias=True,
+        rope_theta=999999.0, tie_embeddings=True, remat="none",
+    )

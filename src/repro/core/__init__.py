@@ -1,0 +1,36 @@
+"""MPX core — the paper's contribution as a composable JAX module.
+
+Import as ``from repro import mpx`` (or ``import repro.core as mpx``) and the
+API reads exactly like the paper:
+
+    loss_scaling, grads_finite, grads = mpx.filter_grad(loss, loss_scaling)(
+        model, batch)
+    model, opt_state = mpx.optimizer_update(
+        model, optimizer, opt_state, grads, grads_finite)
+"""
+from repro.core.casting import (cast_function, cast_leaf, cast_to_bfloat16,
+                                cast_to_float16, cast_to_float32,
+                                cast_to_half_precision, cast_tree,
+                                force_full_precision, half_dtype,
+                                set_half_dtype)
+from repro.core.filtering import (combine, is_array, is_float_array,
+                                  is_inexact_array, partition, select_tree,
+                                  tree_size_bytes)
+from repro.core.grad import filter_grad, filter_value_and_grad
+from repro.core.jit import filter_jit
+from repro.core.loss_scaling import (DynamicLossScaling, NoOpLossScaling,
+                                     all_finite)
+from repro.core.optim_update import apply_updates, optimizer_update
+from repro.core.policy import FULL_F32, MIXED_BF16, MIXED_F16, Policy
+
+__all__ = [
+    "cast_function", "cast_leaf", "cast_to_bfloat16", "cast_to_float16",
+    "cast_to_float32", "cast_to_half_precision", "cast_tree",
+    "force_full_precision", "half_dtype", "set_half_dtype",
+    "combine", "is_array", "is_float_array", "is_inexact_array", "partition",
+    "select_tree", "tree_size_bytes",
+    "filter_grad", "filter_value_and_grad", "filter_jit",
+    "DynamicLossScaling", "NoOpLossScaling", "all_finite",
+    "apply_updates", "optimizer_update",
+    "FULL_F32", "MIXED_BF16", "MIXED_F16", "Policy",
+]

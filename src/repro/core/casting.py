@@ -1,0 +1,109 @@
+"""PyTree casting — Section 3.1 of the MPX paper.
+
+``cast_tree(tree, dtype)`` casts every *floating point array* leaf of an
+arbitrary pytree to ``dtype``; all other leaves — integer arrays, PRNG keys,
+bools, python scalars, arbitrary static objects — pass through untouched.
+The paper calls out PRNG keys explicitly: accidentally casting them corrupts
+the random stream, so the predicate excludes them.
+
+Convenience casts mirror the paper's API:
+``cast_to_half_precision`` / ``cast_to_float16`` / ``cast_to_bfloat16`` /
+``cast_to_float32``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filtering import is_float_array
+
+PyTree = Any
+
+#: The half-precision dtype used by ``cast_to_half_precision``.  bfloat16 is
+#: the TPU-native choice (see DESIGN.md §3); switch to float16 for strict
+#: paper-fidelity on GPU-style hardware via ``set_half_dtype``.
+_HALF_DTYPE = jnp.bfloat16
+
+
+def set_half_dtype(dtype) -> None:
+    """Set the global half-precision dtype (jnp.float16 or jnp.bfloat16)."""
+    global _HALF_DTYPE
+    dtype = jnp.dtype(dtype)
+    if dtype not in (jnp.dtype(jnp.float16), jnp.dtype(jnp.bfloat16)):
+        raise ValueError(f"half dtype must be float16 or bfloat16, got {dtype}")
+    _HALF_DTYPE = dtype
+
+
+def half_dtype():
+    return _HALF_DTYPE
+
+
+def cast_leaf(x: Any, dtype) -> Any:
+    """Cast a single leaf if it is a floating-point array, else passthrough."""
+    if is_float_array(x):
+        return x.astype(dtype) if x.dtype != jnp.dtype(dtype) else x
+    return x
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    """Cast all floating-point array leaves of ``tree`` to ``dtype``.
+
+    Integer arrays (e.g. token ids), boolean masks and PRNG keys are left
+    unchanged — casting them would be a correctness bug, not a precision
+    choice.  Non-array leaves (static fields) also pass through, so this
+    works on Equinox-style module pytrees, Flax param dicts, and plain
+    containers alike.
+    """
+    return jax.tree.map(lambda x: cast_leaf(x, dtype), tree)
+
+
+def cast_to_float16(tree: PyTree) -> PyTree:
+    return cast_tree(tree, jnp.float16)
+
+
+def cast_to_bfloat16(tree: PyTree) -> PyTree:
+    return cast_tree(tree, jnp.bfloat16)
+
+
+def cast_to_float32(tree: PyTree) -> PyTree:
+    return cast_tree(tree, jnp.float32)
+
+
+def cast_to_half_precision(tree: PyTree) -> PyTree:
+    """Cast to the globally-configured half dtype (default bfloat16)."""
+    return cast_tree(tree, _HALF_DTYPE)
+
+
+def cast_function(func, dtype, return_dtype=None):
+    """Section 3.2: wrap ``func`` so all inputs are cast to ``dtype``.
+
+    Returns a new function that casts every argument pytree to ``dtype``,
+    invokes ``func``, and (optionally) casts outputs to ``return_dtype``.
+    Because JAX type promotion keeps weakly-typed constants on the left of
+    the lattice, the body then executes in ``dtype``.
+    """
+
+    def wrapped(*args, **kwargs):
+        args = cast_tree(args, dtype)
+        kwargs = cast_tree(kwargs, dtype)
+        out = func(*args, **kwargs)
+        if return_dtype is not None:
+            out = cast_tree(out, return_dtype)
+        return out
+
+    wrapped.__name__ = getattr(func, "__name__", "cast_function")
+    return wrapped
+
+
+def force_full_precision(func, return_dtype=None):
+    """Section 3.2: run ``func`` in float32 regardless of input precision.
+
+    The canonical MPX guard for overflow/precision-critical ops — softmax,
+    sum, mean, variance, layer norm statistics, logit softcaps.  Inputs are
+    upcast to float32, the body runs in fp32, and outputs are cast to
+    ``return_dtype`` (pass the incoming dtype to drop back to half
+    precision, or ``None`` to keep fp32 outputs).
+    """
+    return cast_function(func, jnp.float32, return_dtype=return_dtype)

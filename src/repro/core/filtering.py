@@ -1,0 +1,95 @@
+"""Equinox-free pytree filtering.
+
+MPX (the paper) leans on Equinox's ``filter_*`` machinery to differentiate
+with respect to *inexact array leaves only* while carrying every other leaf
+(ints, bools, PRNG keys, static configuration) through untouched.  Equinox is
+not available in this environment, so this module rebuilds the minimal core:
+
+- predicates: ``is_array``, ``is_inexact_array``
+- ``partition(tree, pred)``   -> (filtered, static) two trees with ``None``
+  holes, such that ``combine(filtered, static) == tree``
+- ``combine(*trees)``         -> merge trees filling ``None`` holes
+- ``select_tree(pred, a, b)`` -> elementwise jnp.where on matching pytrees
+  (used by the loss-scaling optimizer guard)
+
+All functions treat ``None`` as an empty subtree (JAX default).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def is_array(x: Any) -> bool:
+    """True for JAX and NumPy arrays (not python scalars)."""
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+def is_inexact_array(x: Any) -> bool:
+    """True for floating-point (or complex) array leaves.
+
+    PRNG typed keys report an ``issubdtype`` of ``prng_key`` — they are
+    explicitly excluded, as are integer and boolean arrays.  This is the
+    predicate MPX casts / differentiates by.
+    """
+    if not is_array(x):
+        return False
+    if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+        return False
+    return jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def is_float_array(x: Any) -> bool:
+    """True for real floating-point array leaves (complex excluded)."""
+    return is_array(x) and not jnp.issubdtype(x.dtype, jax.dtypes.prng_key) \
+        and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def partition(tree: PyTree, pred: Callable[[Any], bool] = is_inexact_array,
+              ) -> tuple[PyTree, PyTree]:
+    """Split ``tree`` into (dynamic, static) by a leaf predicate.
+
+    Both outputs have the same structure as ``tree`` with ``None`` at the
+    positions claimed by the other side.  ``combine`` is the inverse.
+    """
+    dynamic = jax.tree.map(lambda x: x if pred(x) else None, tree)
+    static = jax.tree.map(lambda x: None if pred(x) else x, tree)
+    return dynamic, static
+
+
+def combine(*trees: PyTree) -> PyTree:
+    """Merge trees produced by :func:`partition` (first non-None wins)."""
+
+    def _merge(*leaves):
+        for leaf in leaves:
+            if leaf is not None:
+                return leaf
+        return None
+
+    return jax.tree.map(_merge, *trees, is_leaf=lambda x: x is None)
+
+
+def select_tree(pred: jax.Array, true_tree: PyTree, false_tree: PyTree) -> PyTree:
+    """``jnp.where(pred, a, b)`` over matching pytrees (pred is a scalar bool).
+
+    Non-array leaves must be identical in both trees and are passed through.
+    This is the primitive behind ``mpx.optimizer_update``'s skip-on-inf logic.
+    """
+
+    def _sel(a, b):
+        if is_array(a) or is_array(b):
+            return jnp.where(pred, a, b)
+        return a
+
+    return jax.tree.map(_sel, true_tree, false_tree)
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    """Total bytes of all array leaves (host-side accounting helper)."""
+    leaves = [x for x in jax.tree.leaves(tree) if is_array(x)]
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))

@@ -1,0 +1,52 @@
+"""``filter_jit`` — jit for pytrees that mix arrays and static leaves.
+
+Equinox pipelines (the paper's Example 2 wraps its train step in
+``eqx.filter_jit``) freely carry static metadata — strings, ints, callables —
+inside model pytrees.  ``jax.jit`` rejects those.  ``filter_jit`` partitions
+every argument into (arrays, static), traces a jitted function of the array
+part only, and caches one executable per distinct static part.
+
+Static leaves must be hashable for caching; unhashable static leaves fall
+back to tracing on every call (correct, slower, warned once).
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any
+
+import jax
+
+from repro.core.filtering import combine, is_array, partition
+
+_CACHE: dict[Any, Any] = {}
+
+
+def filter_jit(func=None, **jit_kwargs):
+    """Drop-in ``jax.jit`` that tolerates non-array pytree leaves."""
+    if func is None:
+        return functools.partial(filter_jit, **jit_kwargs)
+
+    @functools.wraps(func)
+    def wrapper(*args, **kwargs):
+        dynamic, static = partition((args, kwargs), is_array)
+        static_leaves, static_def = jax.tree.flatten(static)
+        try:
+            key = (func, static_def, tuple(static_leaves))
+            hash(key)
+        except TypeError:
+            warnings.warn("filter_jit: unhashable static leaf; re-tracing "
+                          "every call", stacklevel=2)
+            key = None
+
+        def call(dyn):
+            a, kw = combine(dyn, static)
+            return func(*a, **kw)
+
+        if key is None:
+            return jax.jit(call, **jit_kwargs)(dynamic)
+        if key not in _CACHE:
+            _CACHE[key] = jax.jit(call, **jit_kwargs)
+        return _CACHE[key](dynamic)
+
+    return wrapper

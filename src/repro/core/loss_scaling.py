@@ -1,0 +1,159 @@
+"""Dynamic loss scaling — Section 3.3 of the MPX paper.
+
+:class:`DynamicLossScaling` implements the Micikevicius et al. (2017)
+heuristic:
+
+- multiply the loss by ``scaling`` before differentiation so small gradients
+  survive fp16's limited range,
+- after the backward pass divide the gradients by ``scaling`` (in fp32),
+- if any gradient is non-finite: halve ``scaling`` (clamped at ``min_scaling``)
+  and signal the optimizer to skip the step,
+- after ``period`` consecutive finite steps: double ``scaling`` (clamped at
+  ``max_scaling``).
+
+The object is registered as a JAX pytree (dynamic leaves: ``scaling`` and
+``counter``; static aux: the hyper-parameters), so it can live inside jitted
+train steps, be donated, and be replicated across a mesh — the property the
+paper gets from inheriting ``eqx.Module``, reproduced here without Equinox.
+
+Also exported: :class:`NoOpLossScaling` with the same interface (scale=1,
+never skips), letting full-precision and bf16-without-scaling pipelines run
+through the identical train-step code path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filtering import is_float_array, is_inexact_array
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+class DynamicLossScaling:
+    """Pytree-compatible dynamic loss scaling state + transition rules."""
+
+    def __init__(self, loss_scaling=2.0 ** 15, *, counter=None,
+                 period: int = 2000, factor: float = 2.0,
+                 min_loss_scaling: float = 1.0,
+                 max_loss_scaling: float = 2.0 ** 24):
+        self.loss_scaling = jnp.asarray(loss_scaling, jnp.float32)
+        self.counter = (jnp.asarray(counter, jnp.int32)
+                        if counter is not None else jnp.zeros((), jnp.int32))
+        self.period = int(period)
+        self.factor = float(factor)
+        self.min_loss_scaling = float(min_loss_scaling)
+        self.max_loss_scaling = float(max_loss_scaling)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        children = (self.loss_scaling, self.counter)
+        aux = (self.period, self.factor, self.min_loss_scaling,
+               self.max_loss_scaling)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        loss_scaling, counter = children
+        period, factor, min_ls, max_ls = aux
+        obj = cls.__new__(cls)
+        obj.loss_scaling = loss_scaling
+        obj.counter = counter
+        obj.period = period
+        obj.factor = factor
+        obj.min_loss_scaling = min_ls
+        obj.max_loss_scaling = max_ls
+        return obj
+
+    # -- paper API ---------------------------------------------------------
+    def scale(self, tree: PyTree) -> PyTree:
+        """Multiply every floating leaf by the current scaling factor."""
+        s = self.loss_scaling
+        return jax.tree.map(
+            lambda x: x * s.astype(x.dtype) if is_float_array(x) else x, tree)
+
+    def unscale(self, tree: PyTree) -> PyTree:
+        """Divide every floating leaf by the scaling and cast to fp32.
+
+        The cast-to-fp32 *before* the divide is deliberate (paper step 4→5):
+        scaled fp16 grads may sit near the top of fp16's range; converting
+        first makes the divide exact and the result a full-precision
+        gradient ready for the optimizer.
+        """
+        inv = (1.0 / self.loss_scaling).astype(jnp.float32)
+        return jax.tree.map(
+            lambda x: x.astype(jnp.float32) * inv if is_float_array(x) else x,
+            tree)
+
+    def adjust(self, grads_finite: jax.Array) -> "DynamicLossScaling":
+        """Return updated scaling state given this step's finiteness bit."""
+        grown = self.counter + 1 >= self.period
+        # on finite step: maybe grow; on overflow: shrink and reset counter
+        new_scale = jnp.where(
+            grads_finite,
+            jnp.where(grown,
+                      jnp.minimum(self.loss_scaling * self.factor,
+                                  self.max_loss_scaling),
+                      self.loss_scaling),
+            jnp.maximum(self.loss_scaling / self.factor,
+                        self.min_loss_scaling),
+        )
+        new_counter = jnp.where(
+            grads_finite & ~grown, self.counter + 1, jnp.zeros((), jnp.int32))
+        return DynamicLossScaling(
+            new_scale, counter=new_counter, period=self.period,
+            factor=self.factor, min_loss_scaling=self.min_loss_scaling,
+            max_loss_scaling=self.max_loss_scaling)
+
+    def __repr__(self):
+        return (f"DynamicLossScaling(scaling={self.loss_scaling}, "
+                f"counter={self.counter}, period={self.period}, "
+                f"factor={self.factor})")
+
+
+@jax.tree_util.register_pytree_node_class
+class NoOpLossScaling:
+    """Identity scaling: same interface, scale 1, never adjusts.
+
+    Lets a single train-step implementation serve full-precision and
+    bf16-no-scaling configurations with zero overhead (XLA folds the
+    multiply-by-one away).
+    """
+
+    loss_scaling = jnp.float32(1.0)
+
+    def tree_flatten(self):
+        return (), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+    def scale(self, tree: PyTree) -> PyTree:
+        return tree
+
+    def unscale(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda x: x.astype(jnp.float32) if is_float_array(x) else x, tree)
+
+    def adjust(self, grads_finite: jax.Array) -> "NoOpLossScaling":
+        del grads_finite
+        return self
+
+
+def all_finite(tree: PyTree) -> jax.Array:
+    """Scalar bool: every element of every inexact leaf is finite.
+
+    This is the reduction MPX performs between unscale and the optimizer
+    step.  On a sharded tree XLA lowers it to a tree of local reductions
+    plus one tiny all-reduce — see ``repro/kernels/unscale_finite.py`` for
+    the fused Pallas version used on the hot path.
+    """
+    leaves = [x for x in jax.tree.leaves(tree) if is_inexact_array(x)]
+    if not leaves:
+        return jnp.asarray(True)
+    finite = [jnp.all(jnp.isfinite(x)) for x in leaves]
+    return jnp.stack(finite).all()

@@ -1,0 +1,98 @@
+"""Precision policies (JMP-style), the knob the framework layers consume.
+
+A :class:`Policy` names three dtypes:
+
+- ``param_dtype``   — storage dtype of the master parameters (fp32 in mixed
+  precision training; the optimizer always updates these),
+- ``compute_dtype`` — dtype the forward/backward pass runs in,
+- ``output_dtype``  — dtype activations/losses are returned in.
+
+``Policy.cast_to_compute(tree)`` etc. apply :func:`repro.core.casting.cast_tree`.
+Policies parse from compact strings, e.g.::
+
+    Policy.parse("params=float32,compute=bfloat16,output=float32")
+    Policy.parse("p=f32,c=bf16,o=f32")          # aliases
+    Policy.parse("f32")                          # uniform full precision
+
+The framework default for the TPU target is ``MIXED_BF16``; ``MIXED_F16``
+reproduces the paper's GPU configuration (and is what turns dynamic loss
+scaling from a safety net into a necessity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.casting import cast_tree
+
+_DTYPE_ALIASES = {
+    "f32": jnp.float32, "float32": jnp.float32,
+    "f16": jnp.float16, "float16": jnp.float16, "half": jnp.float16,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    "f64": jnp.float64, "float64": jnp.float64,
+}
+
+_FIELD_ALIASES = {
+    "p": "param_dtype", "params": "param_dtype", "param": "param_dtype",
+    "c": "compute_dtype", "compute": "compute_dtype",
+    "o": "output_dtype", "output": "output_dtype",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+    output_dtype: object = jnp.float32
+
+    # -- casting helpers ---------------------------------------------------
+    def cast_to_param(self, tree):
+        return cast_tree(tree, self.param_dtype)
+
+    def cast_to_compute(self, tree):
+        return cast_tree(tree, self.compute_dtype)
+
+    def cast_to_output(self, tree):
+        return cast_tree(tree, self.output_dtype)
+
+    # -- properties --------------------------------------------------------
+    @property
+    def is_mixed(self) -> bool:
+        return jnp.dtype(self.compute_dtype) != jnp.dtype(self.param_dtype)
+
+    @property
+    def needs_loss_scaling(self) -> bool:
+        """fp16's 5-bit exponent underflows small grads; bf16 does not."""
+        return jnp.dtype(self.compute_dtype) == jnp.dtype(jnp.float16)
+
+    def __str__(self) -> str:
+        n = lambda d: jnp.dtype(d).name
+        return (f"params={n(self.param_dtype)},compute={n(self.compute_dtype)},"
+                f"output={n(self.output_dtype)}")
+
+    # -- parsing -----------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: str) -> "Policy":
+        spec = spec.strip().lower()
+        if "=" not in spec:  # uniform, e.g. "f32" / "bf16"
+            if spec in ("mixed", "mixed_bf16"):
+                return MIXED_BF16
+            if spec == "mixed_f16":
+                return MIXED_F16
+            d = _DTYPE_ALIASES[spec]
+            return cls(param_dtype=d, compute_dtype=d, output_dtype=d)
+        kwargs = {}
+        for part in spec.split(","):
+            key, _, val = part.partition("=")
+            field = _FIELD_ALIASES[key.strip()]
+            kwargs[field] = _DTYPE_ALIASES[val.strip()]
+        return cls(**kwargs)
+
+
+#: TPU-native mixed precision (DESIGN.md §3): fp32 master, bf16 compute.
+MIXED_BF16 = Policy(jnp.float32, jnp.bfloat16, jnp.float32)
+#: Paper-faithful GPU mixed precision: fp32 master, fp16 compute (+ scaling).
+MIXED_F16 = Policy(jnp.float32, jnp.float16, jnp.float32)
+#: Full-precision baseline (the thing the paper's figures compare against).
+FULL_F32 = Policy(jnp.float32, jnp.float32, jnp.float32)

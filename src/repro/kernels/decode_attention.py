@@ -1,0 +1,121 @@
+"""Decode attention Pallas kernel: one query token vs a long KV cache.
+
+The serving hot path (decode_32k / long_500k cells): q (B, H, D) against
+K/V (B, S, K, D).  Unlike prefill flash attention the arithmetic intensity
+is O(1) FLOPs/byte — the kernel is purely HBM-bandwidth-bound streaming the
+cache — so the design goal is: touch every cache byte exactly once, in
+bf16, with fp32 softmax state in scratch, masked by the *current length*
+(a scalar-prefetch operand, so one compiled kernel serves every position).
+
+Grid: (B·K, S/block_k) — K-block innermost, fp32 (m, l, acc) carried in
+VMEM scratch across K steps; GQA handled by keeping the q-group dim G=H/K
+resident (block (G, D), MXU-aligned for G·D ≥ 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_k: int, scale: float):
+    ki = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = length_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[...]                                    # (G, D) bf16
+        k = k_ref[...]                                    # (bk, D) bf16
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bk) fp32
+        pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, D)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (B,H,D) vs cache k/v (B,S,K,D), valid prefix ``length`` (scalar).
+
+    Returns (B,H,D).  K divides H; the rolling-buffer window layout of the
+    framework's local-attention caches is handled by the caller (positions
+    beyond ``length`` are masked here; wrap-around caches pass length=S).
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+
+    qf = q.reshape(b, kv, g, d).transpose(0, 1, 2, 3).reshape(b * kv, g, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    length_arr = jnp.asarray(length, jnp.int32).reshape(1)
+
+    grid = (b * kv, s // block_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, g, d), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bk, ki: (bk, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bk, ki: (bk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, g, d), lambda bk, ki: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length_arr, qf, kf, vf)
+    return out.reshape(b, kv, g, d).reshape(b, h, d)
+
+
+def decode_attention_ref(q, k, v, length):
+    """Pure-jnp oracle: masked softmax attention for one query token."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    ke = jnp.repeat(k, h // kv, axis=2)
+    ve = jnp.repeat(v, h // kv, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, ke).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    mask = jnp.arange(s)[None, None, :] < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bshd->bhd", probs, ve)

@@ -1,0 +1,141 @@
+"""Flash attention for TPU (Pallas): bf16 streaming, fp32 softmax state.
+
+This kernel is the MPX `force_full_precision`-softmax rule implemented where
+it is free: Q/K/V stream through VMEM in bf16 feeding the MXU, while the
+running max / sum-of-exp / output accumulator live in fp32 VMEM scratch.
+
+TPU adaptation (DESIGN.md §3): block shapes are multiples of the 128-wide
+MXU systolic dimension; the grid walks (batch·heads, q_blocks, k_blocks)
+with the K loop innermost so the fp32 state for one (bh, q_block) stays
+resident in scratch across K steps; causal/window key blocks that are fully
+masked are skipped via `pl.when` on the grid indices (halving causal FLOPs —
+something the pure-XLA path cannot do dynamically).
+
+Supports: causal or bidirectional, sliding window, logit softcap (gemma2),
+GQA via pre-expanded heads (`ops.py` handles the expand).  Forward-only:
+training uses the blocked-XLA attention (autodiffable); this kernel is the
+serving/prefill hot path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch,
+                 acc_scratch, *, scale: float, causal: bool, window: int,
+                 softcap: float, block_q: int, block_k: int):
+    """Grid: (BH, n_q, n_k); K innermost.  Block refs are (block, dim)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # skip key blocks entirely outside the causal/window band (grid-dynamic)
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window > 0:
+        run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...]                                     # (bq, d) bf16
+        k = k_ref[...]                                     # (bk, d) bf16
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (bq, bk) fp32
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]                            # (bq, 1) fp32
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (bq, bk) fp32
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, d) fp32
+        acc_scratch[...] = acc_scratch[...] * alpha + pv
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_scratch[...]
+        o_ref[...] = (acc_scratch[...] /
+                      jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = False):
+    """q/k/v: (B, S, H, D), same H (GQA pre-expanded).  Returns (B, S, H, D).
+
+    VMEM working set per grid cell ≈ (block_q + 2·block_k)·D·2B bf16 tiles
+    + block_q·(D+2)·4B fp32 state + block_q·block_k·4B scores ≈ 1.4 MB at
+    the 256/256 defaults with D=128 — comfortable inside ~16 MB VMEM with
+    double buffering.  (m/l scratch is (block_q, 1); on real hardware the
+    compiler pads the lane dim to 128 — still < 0.2 MB.)
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    grid = (b * h, s // block_q, s // block_k)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum-of-exp
+            pltpu.VMEM((block_q, d), jnp.float32),    # fp32 output accum
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,53 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Each op auto-selects: real Pallas lowering on TPU backends, interpret mode
+on CPU (used by the test suite to validate kernel bodies against the
+``ref.py`` oracles).  GQA head expansion for flash attention happens here so
+the kernel itself stays single-layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.unscale_finite import unscale_and_check as _unscale
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """q (B,S,H,D); k/v (B,S,K,D) with K dividing H (GQA auto-expand)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    h, kv = q.shape[2], k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def unscale_and_check(g, inv_scale, *, block: int = 65536,
+                      interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _unscale(g, inv_scale, block=block, interpret=interpret)

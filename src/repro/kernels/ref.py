@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests `assert_allclose` against
+(shape/dtype sweeps, interpret=True execution of the kernels on CPU).
+Everything here is deliberately simple — no blocking, no streaming — and
+follows the MPX precision discipline: fp32 softmax/statistics, compute-dtype
+matmuls.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q/k/v: (B, S, H, D) (same H — expand GQA before calling).
+
+    fp32 scores/softmax, output cast back to q.dtype.
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jnp.ndarray:
+    """(..., D) RMSNorm with fp32 statistics, output in x.dtype."""
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 / rms) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def unscale_finite_ref(g, inv_scale) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused gradient unscale + isfinite reduction (one array).
+
+    Returns (g * inv_scale as fp32, all_finite bool) — the per-leaf body of
+    the MPX loss-scaling hot path.
+    """
+    g32 = g.astype(jnp.float32) * inv_scale
+    return g32, jnp.all(jnp.isfinite(g32))

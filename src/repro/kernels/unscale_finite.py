@@ -1,0 +1,73 @@
+"""Fused gradient unscale + isfinite check (the MPX loss-scaling hot path).
+
+Steps 4–6 of the paper's recipe — convert to fp32, divide by the scaling,
+test finiteness — touch every gradient element.  Done naively that is three
+HBM passes; this kernel does one: each block is read once, multiplied by
+``1/scale`` in fp32, written once, while a scalar finite-flag accumulates in
+SMEM across the grid (initialized at step 0, AND-reduced, readable as the
+second output).
+
+The wrapper handles arbitrary 1-D-flattenable arrays with tail padding
+(pad values are 0, which is finite and cannot flip the flag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unscale_kernel(inv_ref, g_ref, o_ref, flag_ref, ok_smem):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ok_smem[0] = jnp.int32(1)
+
+    g32 = g_ref[...].astype(jnp.float32) * inv_ref[0]
+    o_ref[...] = g32
+    blk_ok = jnp.all(jnp.isfinite(g32))
+    ok_smem[0] = ok_smem[0] * blk_ok.astype(jnp.int32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _write():
+        flag_ref[0] = ok_smem[0]
+
+
+def unscale_and_check(g, inv_scale, *, block: int = 65536,
+                      interpret: bool = False):
+    """g (any shape), inv_scale scalar fp32 -> (g*inv fp32, all_finite bool)."""
+    orig_shape = g.shape
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    grid = (flat.shape[0] // block,)
+    inv = jnp.asarray(inv_scale, jnp.float32).reshape(1)
+
+    out, flag = pl.pallas_call(
+        _unscale_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(inv, flat)
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape), flag[0].astype(jnp.bool_)

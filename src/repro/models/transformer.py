@@ -1,0 +1,344 @@
+"""The unified transformer: one model, ten architectures.
+
+A :class:`~repro.configs.base.ModelConfig` describes the stack as a repeating
+``pattern`` of layer kinds (``attn`` / ``local_attn`` / ``rglru`` / ``ssd``),
+each followed by a dense or MoE MLP (or none).  Repeated pattern groups are
+parameter-stacked and driven by ``jax.lax.scan`` — the single most important
+compile-time lever for the 512-device dry-run (HLO contains one group body,
+not ``n_layers`` copies).  Remainder layers (n_layers % len(pattern)) are
+unrolled.
+
+Public API (all pure functions; ``params`` is a nested dict pytree):
+
+- ``abstract_params(cfg)``                 -> ParamSpec tree
+- ``init_params(key, cfg)``                -> fp32 parameter tree
+- ``forward(params, cfg, batch, policy)``  -> (logits, aux_loss)
+- ``loss_fn(params, cfg, batch)``          -> (loss, metrics)   [MPX-ready]
+- ``abstract_cache(cfg, batch, max_seq)``  -> decode-state tree (ShapeDtype)
+- ``decode(params, cfg, cache, tokens, pos)`` -> (logits, new_cache)
+
+Precision: the *caller* (``mpx.filter_value_and_grad``) casts params and
+batch to the compute dtype; this module only pins the known-fragile spots to
+fp32 (softmax, norms, router, recurrent gates/decays, softcaps, loss lse) —
+exactly the paper's Example-1 discipline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import mpx
+from repro.configs.base import ModelConfig
+from repro.nn import attention, embedding, moe as moe_lib, mlp as mlp_lib
+from repro.nn import param as P
+from repro.nn import rglru, ssd
+from repro.nn.norms import apply_norm, norm_spec
+from repro.sharding.rules import shard
+
+PyTree = Any
+
+
+# ==========================================================================
+# parameter specs
+# ==========================================================================
+
+def _block_spec(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    spec: dict = {"pre_norm": norm_spec(cfg.norm, d)}
+    if kind in ("attn", "local_attn"):
+        spec["attn"] = attention.attention_spec(
+            d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias, out_bias=cfg.out_bias)
+    elif kind == "rglru":
+        spec["rec"] = rglru.rglru_spec(d, cfg.d_rnn or d, cfg.conv_width)
+    elif kind == "ssd":
+        spec["ssd"] = ssd.ssd_spec(d, cfg.d_inner, cfg.ssm_heads,
+                                   cfg.ssm_headdim, cfg.ssm_state,
+                                   cfg.conv_width)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.post_norm:
+        spec["post_mix_norm"] = norm_spec(cfg.norm, d)
+    if cfg.mlp != "none":
+        spec["mlp_norm"] = norm_spec(cfg.norm, d)
+        if cfg.moe_experts > 0:
+            spec["moe"] = moe_lib.moe_spec(d, cfg.d_ff, cfg.moe_experts,
+                                           kind=cfg.mlp)
+        else:
+            spec["mlp"] = mlp_lib.mlp_spec(cfg.mlp, d, cfg.d_ff,
+                                           bias=cfg.mlp_bias)
+        if cfg.post_norm:
+            spec["post_mlp_norm"] = norm_spec(cfg.norm, d)
+    return spec
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_scan_groups, remainder_kinds)."""
+    lp = len(cfg.pattern)
+    if not cfg.scan_layers:
+        return 0, cfg.layer_kinds()
+    n_groups = cfg.n_layers // lp
+    rem = cfg.layer_kinds()[n_groups * lp:]
+    return n_groups, rem
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    n_groups, rem = _layout(cfg)
+    spec: dict = {"embed": embedding.embedding_spec(cfg)}
+    if n_groups > 0:
+        group = {f"b{i}": _block_spec(cfg, kind)
+                 for i, kind in enumerate(cfg.pattern)}
+        spec["scan"] = P.stack_specs(group, n_groups, "layers")
+    for j, kind in enumerate(rem):
+        spec[f"tail{j}"] = _block_spec(cfg, kind)
+    spec["final_norm"] = norm_spec(cfg.norm, cfg.d_model)
+    un = embedding.unembed_spec(cfg)
+    if un:
+        spec["unembed"] = un
+    return spec
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    return P.initialize(key, abstract_params(cfg))
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    return P.abstract(abstract_params(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return P.count_params(abstract_params(cfg))
+
+
+# ==========================================================================
+# forward (training / prefill)
+# ==========================================================================
+
+def _block_apply(cfg: ModelConfig, kind: str, p: PyTree, x: jnp.ndarray,
+                 aux: jnp.ndarray, positions=None):
+    h = shard(apply_norm(cfg.norm, p["pre_norm"], x),
+              ("batch", "seq", "embed"))
+    if kind in ("attn", "local_attn"):
+        y = attention.attention_apply(
+            p["attn"], h, n_heads=cfg.n_heads, causal=cfg.causal,
+            window=cfg.window if kind == "local_attn" else 0,
+            cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            positions=positions)
+    elif kind == "rglru":
+        y = rglru.rglru_block_apply(p["rec"], h, conv_width=cfg.conv_width)
+    else:  # ssd
+        y = ssd.ssd_block_apply(p["ssd"], h, n_heads=cfg.ssm_heads,
+                                headdim=cfg.ssm_headdim,
+                                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                conv_width=cfg.conv_width)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["post_mix_norm"], y)
+    x = x + y
+    if cfg.mlp != "none":
+        h = shard(apply_norm(cfg.norm, p["mlp_norm"], x),
+                  ("batch", "seq", "embed"))
+        if cfg.moe_experts > 0:
+            y, moe_aux = moe_lib.moe_apply(
+                p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                kind=cfg.mlp, capacity_factor=cfg.capacity_factor)
+            aux = aux + moe_aux
+        else:
+            y = mlp_lib.mlp_apply(cfg.mlp, p["mlp"], h)
+        if cfg.post_norm:
+            y = apply_norm(cfg.norm, p["post_mlp_norm"], y)
+        x = x + y
+    return shard(x, ("batch", "seq", "embed")), aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, dtype):
+    """Build the (B,S,d) input sequence from the batch dict."""
+    if cfg.frontend == "frames":
+        return embedding.embed_frontend(params["embed"], cfg,
+                                        batch["features"], dtype)
+    x = embedding.embed_tokens(params["embed"], cfg, batch["inputs"], dtype)
+    if cfg.frontend == "patches" and "patches" in batch:
+        img = embedding.embed_frontend(params["embed"], cfg,
+                                       batch["patches"], dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params: PyTree, cfg: ModelConfig, batch: dict,
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits (B,S,V) compute dtype, aux_loss fp32 scalar).
+
+    For the VLM the returned logits cover only the text positions (the
+    patch prefix is stripped before the head).
+    """
+    # compute dtype is whatever the (possibly mpx-cast) params arrived in
+    dtype = params["embed"][next(iter(params["embed"]))].dtype
+    x = _embed_inputs(params, cfg, batch, dtype)
+    aux = jnp.zeros((), jnp.float32)
+    n_groups, rem = _layout(cfg)
+
+    if n_groups > 0:
+        def group_body(carry, gparams):
+            x, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                x, aux = _block_apply(cfg, kind, gparams[f"b{i}"], x, aux)
+            return (x, aux), None
+
+        body = _remat_wrap(cfg, group_body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["scan"])
+    for j, kind in enumerate(rem):
+        fn = _remat_wrap(cfg, functools.partial(_block_apply, cfg, kind))
+        x, aux = fn(params[f"tail{j}"], x, aux)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.frontend == "patches":
+        n_patch = batch["patches"].shape[1] if "patches" in batch else 0
+        if n_patch:
+            x = x[:, n_patch:]
+    logits = embedding.logits_fn(params["embed"], params.get("unembed", {}),
+                                 cfg, x)
+    return logits, aux
+
+
+# ==========================================================================
+# loss (MPX-ready: signature loss(model, batch))
+# ==========================================================================
+
+def _ce(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy with fp32 log-sum-exp (fused upcast, no fp32 (B,S,V))."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(l32, axis=-1)
+    ll = jnp.take_along_axis(l32, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, moe_aux_weight: float = 0.01):
+    """Returns ``loss(params, batch) -> (loss, metrics)`` for mpx.filter_*."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward(params, cfg, batch)
+        ce = _ce(logits, batch["targets"])
+        loss = ce + moe_aux_weight * aux
+        return loss, {"ce": ce, "moe_aux": aux}
+
+    return loss_fn
+
+
+# ==========================================================================
+# decode (single-token serve step)
+# ==========================================================================
+
+def _block_state_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                      dtype):
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        return attention.init_cache_spec(batch, max_seq, cfg.n_kv_heads,
+                                         cfg.resolved_head_dim, window, dtype)
+    if kind == "rglru":
+        return rglru.rglru_state_spec(batch, cfg.d_rnn or cfg.d_model,
+                                      cfg.conv_width, dtype)
+    return ssd.ssd_state_spec(batch, cfg.d_inner, cfg.ssm_state,
+                              cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.conv_width, dtype)
+
+
+def _stack_sds(tree: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree,
+        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+    """Decode-state stand-ins mirroring the scan/tail parameter layout."""
+    n_groups, rem = _layout(cfg)
+    cache: dict = {}
+    if n_groups > 0:
+        group = {f"b{i}": _block_state_spec(cfg, kind, batch, max_seq, dtype)
+                 for i, kind in enumerate(cfg.pattern)}
+        cache["scan"] = _stack_sds(group, n_groups)
+    for j, kind in enumerate(rem):
+        cache[f"tail{j}"] = _block_state_spec(cfg, kind, batch, max_seq, dtype)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_seq, dtype),
+                        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: PyTree, st: PyTree,
+                  x: jnp.ndarray, pos):
+    h = apply_norm(cfg.norm, p["pre_norm"], x)
+    if kind in ("attn", "local_attn"):
+        y, st = attention.decode_step(
+            p["attn"], st, h, pos, n_heads=cfg.n_heads,
+            window=cfg.window if kind == "local_attn" else 0,
+            cap=cfg.attn_softcap, rope_theta=cfg.rope_theta)
+    elif kind == "rglru":
+        y, st = rglru.rglru_block_apply(p["rec"], h,
+                                        conv_width=cfg.conv_width, state=st)
+    else:
+        y, st = ssd.ssd_block_apply(p["ssd"], h, n_heads=cfg.ssm_heads,
+                                    headdim=cfg.ssm_headdim,
+                                    d_state=cfg.ssm_state,
+                                    chunk=cfg.ssm_chunk,
+                                    conv_width=cfg.conv_width, state=st)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["post_mix_norm"], y)
+    x = x + y
+    if cfg.mlp != "none":
+        h = apply_norm(cfg.norm, p["mlp_norm"], x)
+        if cfg.moe_experts > 0:
+            y, _ = moe_lib.moe_apply(
+                p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                kind=cfg.mlp, capacity_factor=2.0)
+        else:
+            y = mlp_lib.mlp_apply(cfg.mlp, p["mlp"], h)
+        if cfg.post_norm:
+            y = apply_norm(cfg.norm, p["post_mlp_norm"], y)
+        x = x + y
+    return x, st
+
+
+def decode(params: PyTree, cfg: ModelConfig, cache: PyTree,
+           tokens: jnp.ndarray, pos) -> tuple[jnp.ndarray, PyTree]:
+    """One token for every sequence: tokens (B,1) -> logits (B,1,V)."""
+    dtype = params["embed"][next(iter(params["embed"]))].dtype
+    x = embedding.embed_tokens(params["embed"], cfg, tokens, dtype)
+    n_groups, rem = _layout(cfg)
+    new_cache: dict = {}
+
+    if n_groups > 0:
+        def group_body(x, scanned):
+            gparams, gcache = scanned
+            new_gcache = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, st = _block_decode(cfg, kind, gparams[f"b{i}"],
+                                      gcache[f"b{i}"], x, pos)
+                new_gcache[f"b{i}"] = st
+            return x, new_gcache
+
+        x, new_cache["scan"] = jax.lax.scan(
+            group_body, x, (params["scan"], cache["scan"]))
+    for j, kind in enumerate(rem):
+        x, new_cache[f"tail{j}"] = _block_decode(
+            cfg, kind, params[f"tail{j}"], cache[f"tail{j}"], x, pos)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = embedding.logits_fn(params["embed"], params.get("unembed", {}),
+                                 cfg, x)
+    return logits, new_cache

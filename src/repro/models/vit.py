@@ -1,0 +1,126 @@
+"""Vision Transformer — the paper's own evaluation model (Section 5).
+
+The MPX paper trains (a) a small ViT (feature size 256, one 800-wide hidden
+layer per block) on CIFAR-100 on a desktop GPU, and (b) a ViT-Base
+(768/3072) on ImageNet1k on 4×H100.  This module reproduces that model
+functionally on top of the same nn substrate as the LM architectures, and
+is what `examples/train_vit.py` + the paper-figure benchmarks drive.
+
+Classification head over the CLS token; learned positional embeddings;
+LayerNorm (fp32 statistics via the MPX rule) — matching the paper's
+Example 1 structure (pre-LN blocks, fp32 softmax/norm, half-precision
+matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention, mlp as mlp_lib
+from repro.nn import param as P
+from repro.nn.norms import apply_norm, norm_spec
+from repro.nn.param import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str = "vit-paper-desktop"
+    image_size: int = 32
+    patch_size: int = 4
+    channels: int = 3
+    d_model: int = 256
+    n_layers: int = 6
+    n_heads: int = 8
+    d_ff: int = 800            # the paper's "one hidden layer of 800 neurons"
+    n_classes: int = 100
+
+
+#: the paper's two evaluation configs
+PAPER_DESKTOP = ViTConfig()
+VIT_BASE = ViTConfig(name="vit-base", image_size=224, patch_size=16,
+                     d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+                     n_classes=1000)
+
+
+def num_patches(cfg: ViTConfig) -> int:
+    return (cfg.image_size // cfg.patch_size) ** 2
+
+
+def abstract_params(cfg: ViTConfig):
+    patch_dim = cfg.patch_size ** 2 * cfg.channels
+    head_dim = cfg.d_model // cfg.n_heads
+    block = {
+        "norm1": norm_spec("layernorm", cfg.d_model),
+        "attn": attention.attention_spec(cfg.d_model, cfg.n_heads,
+                                         cfg.n_heads, head_dim,
+                                         qkv_bias=True, out_bias=True),
+        "norm2": norm_spec("layernorm", cfg.d_model),
+        "mlp": mlp_lib.mlp_spec("gelu", cfg.d_model, cfg.d_ff, bias=True),
+    }
+    return {
+        "patch_embed": ParamSpec((patch_dim, cfg.d_model),
+                                 ("img_embed", "embed")),
+        "cls": ParamSpec((1, 1, cfg.d_model), (None, None, "embed"),
+                         init="zeros"),
+        "pos": ParamSpec((1, num_patches(cfg) + 1, cfg.d_model),
+                         (None, "patch", "embed"), init="embed", scale=0.02),
+        "blocks": P.stack_specs(block, cfg.n_layers, "layers"),
+        "final_norm": norm_spec("layernorm", cfg.d_model),
+        "head": ParamSpec((cfg.d_model, cfg.n_classes), ("embed", "vocab")),
+        "head_b": ParamSpec((cfg.n_classes,), ("vocab",), init="zeros"),
+    }
+
+
+def init_params(key, cfg: ViTConfig):
+    return P.initialize(key, abstract_params(cfg))
+
+
+def patchify(cfg: ViTConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, N, patch_dim)."""
+    b, h, w, c = images.shape
+    p = cfg.patch_size
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+def forward(params, cfg: ViTConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, n_classes) logits.  Runs in the params' dtype."""
+    dtype = params["patch_embed"].dtype
+    x = patchify(cfg, images).astype(dtype) @ params["patch_embed"]
+    cls = jnp.broadcast_to(params["cls"].astype(dtype),
+                           (x.shape[0], 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"].astype(dtype)
+
+    def block(x, p):
+        h = apply_norm("layernorm", p["norm1"], x)
+        x = x + attention.attention_apply(
+            p["attn"], h, n_heads=cfg.n_heads, causal=False, window=0,
+            cap=0.0, rope_theta=0.0, use_blocked=False)
+        h = apply_norm("layernorm", p["norm2"], x)
+        x = x + mlp_lib.mlp_apply("gelu", p["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = apply_norm("layernorm", params["final_norm"], x)
+    logits = x[:, 0] @ params["head"] + params["head_b"]
+    return logits
+
+
+def make_loss_fn(cfg: ViTConfig):
+    """loss(params, batch={'images','labels'}) — fp32 lse (MPX-ready)."""
+
+    def loss_fn(params, batch):
+        logits = forward(params, cfg, batch["images"]).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, batch["labels"][:, None],
+                                 axis=-1)[:, 0]
+        loss = jnp.mean(lse - ll)
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                       .astype(jnp.float32))
+        return loss, {"acc": acc}
+
+    return loss_fn

@@ -1,0 +1,7 @@
+"""Paper-style alias: ``import repro.mpx as mpx`` (or ``from repro import mpx``).
+
+Everything in :mod:`repro.core`, re-exported under the name used throughout
+the MPX paper's listings.
+"""
+from repro.core import *  # noqa: F401,F403
+from repro.core import __all__  # noqa: F401

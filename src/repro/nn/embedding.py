@@ -1,0 +1,65 @@
+"""Token embeddings, stub modality frontends, and the output head.
+
+The unembed projection produces logits in the compute dtype; the loss is
+responsible for fp32 log-sum-exp (the astype is fused by XLA into the
+reduction, so no fp32 (B,S,V) tensor is ever materialized).  Final logit
+softcap (gemma-2) runs in fp32 per the paper's force-full-precision rule.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.norms import softcap as apply_softcap
+from repro.nn.param import ParamSpec
+from repro.sharding.rules import shard
+
+
+def embedding_spec(cfg):
+    spec = {}
+    if cfg.frontend != "frames":          # audio stub consumes features only
+        spec["tok"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                ("vocab", "embed"), init="embed", scale=0.02)
+    if cfg.frontend in ("frames", "patches"):
+        dim = cfg.frontend_dim or cfg.d_model
+        spec["frontend_proj"] = ParamSpec((dim, cfg.d_model),
+                                          ("img_embed", "embed"))
+    return spec
+
+
+def unembed_spec(cfg):
+    if cfg.tie_embeddings or cfg.frontend == "frames":
+        # frames (hubert): classification head over vocab_size units
+        if cfg.frontend == "frames":
+            return {"w": ParamSpec((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"))}
+        return {}
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))}
+
+
+def embed_tokens(params, cfg, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    """tokens (B,S) int32 -> (B,S,d) in compute dtype."""
+    x = params["tok"].astype(dtype)[tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def embed_frontend(params, cfg, features: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Stub frontend: precomputed frame/patch embeddings -> model width."""
+    x = features.astype(dtype) @ params["frontend_proj"].astype(dtype)
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def logits_fn(embed_params, unembed_params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B,S,d) -> logits (B,S,V) in compute dtype (+ fp32 softcap)."""
+    dtype = x.dtype
+    if cfg.tie_embeddings and "tok" in embed_params and not unembed_params:
+        logits = jnp.einsum("bsd,vd->bsv", x, embed_params["tok"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed_params["w"].astype(dtype))
+    if cfg.final_softcap > 0:
+        logits = apply_softcap(logits, cfg.final_softcap)
+    return shard(logits, ("batch", "seq", "vocab"))

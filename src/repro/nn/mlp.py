@@ -1,0 +1,54 @@
+"""Dense MLP blocks: SwiGLU (llama/qwen/phi), GeGLU (gemma), GELU (starcoder,
+hubert, ViT).  Projections run in the compute dtype; the nonlinearity is
+cheap enough that precision handling is unnecessary (silu/gelu are bounded
+or near-linear — unlike softmax there is no large-sum overflow risk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.sharding.rules import shard
+
+
+def mlp_spec(kind: str, d_model: int, d_ff: int, bias: bool = False):
+    if kind in ("swiglu", "geglu"):
+        spec = {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        }
+    elif kind == "gelu":
+        spec = {
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        }
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    if bias:
+        spec["b_up"] = ParamSpec((d_ff,), ("mlp",), init="zeros")
+        spec["b_down"] = ParamSpec((d_model,), ("embed",), init="zeros")
+    return spec
+
+
+def mlp_apply(kind: str, params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_model) -> (..., d_model), TP-sharded over the hidden dim."""
+    dtype = x.dtype
+    if kind in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(dtype)
+        up = x @ params["w_up"].astype(dtype)
+        if "b_up" in params:
+            up = up + params["b_up"].astype(dtype)
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        hidden = act * up
+    else:  # gelu
+        hidden = x @ params["w_up"].astype(dtype)
+        if "b_up" in params:
+            hidden = hidden + params["b_up"].astype(dtype)
+        hidden = jax.nn.gelu(hidden)
+    hidden = shard(hidden, ("batch", "seq", "mlp"))
+    out = hidden @ params["w_down"].astype(dtype)
+    if "b_down" in params:
+        out = out + params["b_down"].astype(dtype)
+    return shard(out, ("batch", "seq", "embed"))

@@ -1,0 +1,177 @@
+"""Top-k Mixture of Experts with static-capacity dispatch (GShard-style).
+
+Routing runs **in fp32** (`mpx.force_full_precision`) — router logits and
+top-k softmax are the most precision-sensitive computation in an MoE and a
+canonical application of the paper's technique (DESIGN.md §4).
+
+Dispatch avoids the O(T·E·C) one-hot dispatch tensor of the classic einsum
+formulation: assignment ranks come from a cumsum over a (T·k, E) one-hot,
+and tokens move through a scatter-add into an (E, C, d) buffer and a gather
+back.  Memory is O(T·k·d + E·C·d), which is what makes the 32k-prefill MoE
+cells lowerable.  Tokens beyond an expert's capacity are dropped (standard
+top-k-with-capacity semantics); the residual connection carries them.
+
+Sharding: the expert dim maps to the "model" mesh axis when divisible
+(phi3.5: 16 experts on 16-way TP = pure expert parallelism); otherwise the
+expert-internal hidden dim is TP-sharded (mixtral: 8 experts, d_ff 14336).
+Both come from the same rule table — no code change.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import mpx
+from repro.nn.param import ParamSpec
+from repro.sharding import rules as R
+from repro.sharding.rules import shard
+
+
+def moe_spec(d_model: int, d_ff: int, n_experts: int, kind: str = "swiglu"):
+    spec = {
+        "router": ParamSpec((d_model, n_experts), ("embed", "experts")),
+        "w_up": ParamSpec((n_experts, d_model, d_ff),
+                          ("experts", "embed", "moe_mlp")),
+        "w_down": ParamSpec((n_experts, d_ff, d_model),
+                            ("experts", "moe_mlp", "embed")),
+    }
+    if kind in ("swiglu", "geglu"):
+        spec["w_gate"] = ParamSpec((n_experts, d_model, d_ff),
+                                   ("experts", "embed", "moe_mlp"))
+    return spec
+
+
+def _route_and_rank(params, xf, *, n_experts: int, top_k: int,
+                    capacity: int):
+    """Per-group routing + assignment ranks.  xf (T_g, d)."""
+    t = xf.shape[0]
+
+    def _route(xin):
+        return xin @ params["router"].astype(jnp.float32)
+
+    logits = mpx.force_full_precision(_route, None)(xf)          # (T,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, top_k)               # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    me = probs.mean(axis=0)                                      # (E,)
+    ce_frac = jnp.zeros((n_experts,), jnp.float32).at[expert_idx.reshape(-1)] \
+        .add(1.0) / (t * top_k)
+    lb_loss = n_experts * jnp.sum(me * ce_frac)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = lb_loss + 1e-3 * z_loss
+
+    flat_e = expert_idx.reshape(-1)                              # (T·k,)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    pos_c = jnp.minimum(pos, capacity - 1)
+    return flat_e, pos_c, keep, gate, aux
+
+
+def _dispatch(xf, flat_e, pos_c, keep, *, n_experts: int, top_k: int,
+              capacity: int):
+    """Scatter one group's tokens into (E, C, d)."""
+    t, d = xf.shape
+    token_idx = jnp.repeat(jnp.arange(t), top_k)
+    contrib = jnp.where(keep[:, None], xf[token_idx], 0).astype(xf.dtype)
+    x_e = jnp.zeros((n_experts, capacity, d), xf.dtype)
+    return x_e.at[flat_e, pos_c].add(contrib)
+
+
+def _combine(y_e, flat_e, pos_c, keep, gate, *, top_k: int):
+    """Gather one group's expert outputs back to (T_g, d)."""
+    t = gate.shape[0]
+    d = y_e.shape[-1]
+    y_assign = y_e[flat_e, pos_c]                                # (T·k, d)
+    y_assign = jnp.where(keep[:, None], y_assign, 0)
+    weighted = y_assign.astype(jnp.float32) * gate.reshape(-1)[:, None]
+    return weighted.reshape(t, top_k, d).sum(axis=1).astype(y_e.dtype)
+
+
+def _expert_ffn(params, x_e, kind: str):
+    """(..., E, C, d) -> (..., E, C, d); EP or TP per the rule table."""
+    dtype = x_e.dtype
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("...ecd,edf->...ecf", x_e,
+                       params["w_gate"].astype(dtype))
+        u = jnp.einsum("...ecd,edf->...ecf", x_e,
+                       params["w_up"].astype(dtype))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", x_e,
+                                   params["w_up"].astype(dtype)))
+    h = shard(h, ("moe_group", "experts", "exp_cap", "moe_mlp"))
+    return jnp.einsum("...ecf,efd->...ecd", h, params["w_down"].astype(dtype))
+
+
+def _moe_one_group(params, xf: jnp.ndarray, *, n_experts: int, top_k: int,
+                   kind: str, capacity: int):
+    """Unsharded single-group path (unit tests / no-mesh execution)."""
+    flat_e, pos_c, keep, gate, aux = _route_and_rank(
+        params, xf, n_experts=n_experts, top_k=top_k, capacity=capacity)
+    x_e = _dispatch(xf, flat_e, pos_c, keep, n_experts=n_experts,
+                    top_k=top_k, capacity=capacity)
+    y_e = _expert_ffn(params, x_e, kind)
+    out = _combine(y_e, flat_e, pos_c, keep, gate, top_k=top_k)
+    return out, aux.astype(jnp.float32)
+
+
+def moe_apply(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              kind: str = "swiglu", capacity_factor: float = 1.25,
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar fp32).
+
+    Distribution (§Perf iteration A, see EXPERIMENTS.md): GSPMD partitions
+    the dispatch *scatter* poorly — it replicates the (E, C, d) buffers,
+    inserting ~38 GiB of per-layer all-gather/all-reduce on the production
+    mesh.  So when a mesh is installed, the whole dispatch/compute/combine
+    runs inside ``shard_map`` MANUAL over the data axes (each DP shard
+    dispatches its own tokens into a local capacity buffer — GShard group
+    semantics, zero cross-data collectives) while the model axis stays AUTO
+    so the expert einsums keep their EP/TP GSPMD sharding.  Without a mesh
+    (unit tests) the same body runs directly with one global group.
+    """
+    b, s, d = x.shape
+    mesh, _ = R._get_ctx()
+    dp_axes = tuple(ax for ax in ("pod", "data")
+                    if mesh is not None and ax in mesh.shape
+                    and mesh.shape[ax] > 1)
+    groups = 1
+    for ax in dp_axes:
+        groups *= mesh.shape[ax]
+    if b % groups:          # microbatch smaller than the DP section
+        groups = 1
+    t_g = (b // groups) * s
+    capacity = int(math.ceil(t_g * top_k / n_experts * capacity_factor))
+
+    if groups <= 1:
+        out, aux = _moe_one_group(params, x.reshape(b * s, d),
+                                  n_experts=n_experts, top_k=top_k,
+                                  kind=kind, capacity=capacity)
+        return out.reshape(b, s, d), aux
+
+    # Staged, vmapped-over-groups pipeline with explicit sharding
+    # constraints between stages.  The vmapped scatter/gather become
+    # operand-batched ops whose batch (group) dim GSPMD keeps sharded on
+    # the data axes — verified to eliminate the replicated-dispatch
+    # collectives (EXPERIMENTS.md §Perf iteration A).
+    xg = shard(x.reshape(groups, t_g, d), ("moe_group", None, "embed"))
+    flat_e, pos_c, keep, gate, aux = jax.vmap(
+        functools.partial(_route_and_rank, params, n_experts=n_experts,
+                          top_k=top_k, capacity=capacity))(xg)
+    x_e = jax.vmap(functools.partial(_dispatch, n_experts=n_experts,
+                                     top_k=top_k, capacity=capacity)
+                   )(xg, flat_e, pos_c, keep)
+    x_e = shard(x_e, ("moe_group", "experts", "exp_cap", "embed"))
+    y_e = _expert_ffn(params, x_e, kind)
+    y_e = shard(y_e, ("moe_group", "experts", "exp_cap", "embed"))
+    out = jax.vmap(functools.partial(_combine, top_k=top_k)
+                   )(y_e, flat_e, pos_c, keep, gate)
+    out = shard(out, ("moe_group", None, "embed"))
+    return out.reshape(b, s, d), jnp.mean(aux)

@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (per-channel decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Precision (DESIGN.md §4): the gate/decay math and the scan state are fp32 —
+``a_t -> 1`` makes ``sqrt(1 - a_t^2)`` catastrophically cancel in bf16, and
+the recurrence compounds rounding over thousands of steps.  Inputs/outputs
+and the surrounding projections stay in the compute dtype.  Training uses
+``jax.lax.associative_scan`` (parallel prefix, TPU-friendly); decode carries
+(h, conv buffer) state per layer.
+
+The full recurrent block (as in Griffin) is:
+  norm -> [branch A: linear -> conv1d(4) -> RG-LRU] * [branch B: linear -> gelu]
+       -> linear out
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.sharding.rules import shard
+
+_C = 8.0
+
+
+def rglru_spec(d_model: int, d_rnn: int, conv_width: int = 4):
+    return {
+        "w_in_x": ParamSpec((d_model, d_rnn), ("embed", "rnn")),
+        "w_in_gate": ParamSpec((d_model, d_rnn), ("embed", "rnn")),
+        "conv_w": ParamSpec((conv_width, d_rnn), (None, "rnn"), init="normal",
+                            scale=0.5),
+        "conv_b": ParamSpec((d_rnn,), ("rnn",), init="zeros"),
+        "w_a": ParamSpec((d_rnn, d_rnn), ("rnn", None)),
+        "b_a": ParamSpec((d_rnn,), ("rnn",), init="zeros"),
+        "w_x": ParamSpec((d_rnn, d_rnn), ("rnn", None)),
+        "b_x": ParamSpec((d_rnn,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((d_rnn,), ("rnn",), init="normal", scale=1.0),
+        "w_out": ParamSpec((d_rnn, d_model), ("rnn", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv along seq.  x (B,S,C), w (W,C) -> (B,S,C).
+
+    With ``state`` (B,W-1,C): decode mode, returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is not None:
+        hist = jnp.concatenate([state, x], axis=1)          # (B, W-1+S, C)
+        new_state = hist[:, -(width - 1):]
+    else:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+        hist = jnp.concatenate([pad, x], axis=1)
+        new_state = None
+    y = sum(hist[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    y = y + b.astype(x.dtype)
+    return y, new_state
+
+
+def _gates(params, x: jnp.ndarray):
+    """fp32 decay a_t and gated input; x (B,S,C) in compute dtype."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) via expm1 for numerical accuracy near a = 1.  The clamp
+    # keeps sqrt away from 0 where its gradient is inf: a == 1 exactly
+    # (sigmoid underflow in r) means "pure memory, no input" — a zero
+    # gradient there is the correct limit, not NaN.
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    gated = beta * (i * x32)
+    return a, gated
+
+
+def rglru_scan(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Training-mode RG-LRU over (B,S,C) via parallel associative scan."""
+    a, gated = _gates(params, x)                       # fp32 (B,S,C)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(params, h: jnp.ndarray, x: jnp.ndarray):
+    """Decode: one step. h (B,C) fp32 carried state; x (B,1,C)."""
+    a, gated = _gates(params, x)                       # (B,1,C)
+    h_new = a[:, 0] * h + gated[:, 0]
+    return h_new.astype(jnp.float32), h_new.astype(x.dtype)[:, None]
+
+
+def rglru_block_apply(params, x: jnp.ndarray, *, conv_width: int = 4,
+                      state: dict | None = None, ):
+    """Full Griffin recurrent block.  x (B,S,d_model) -> same shape.
+
+    ``state``: None for training; dict(h=(B,C) fp32, conv=(B,W-1,C)) for
+    decode — returns (y, new_state) in that case.
+    """
+    dtype = x.dtype
+    u = x @ params["w_in_x"].astype(dtype)             # (B,S,C) recurrent branch
+    g = x @ params["w_in_gate"].astype(dtype)          # gate branch
+    u = shard(u, ("batch", "seq", "rnn"))
+    if state is None:
+        u, _ = _causal_conv(u, params["conv_w"], params["conv_b"])
+        h = rglru_scan(params, u)
+        y = h * jax.nn.gelu(g)
+        out = y @ params["w_out"].astype(dtype)
+        return shard(out, ("batch", "seq", "embed"))
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                 state["conv"])
+    h_new, h_out = rglru_step(params, state["h"], u)
+    y = h_out * jax.nn.gelu(g)
+    out = y @ params["w_out"].astype(dtype)
+    return out, {"h": h_new, "conv": conv_state}
+
+
+def rglru_state_spec(batch: int, d_rnn: int, conv_width: int, dtype):
+    return {
+        "h": jax.ShapeDtypeStruct((batch, d_rnn), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, conv_width - 1, d_rnn), dtype),
+    }

@@ -1,0 +1,37 @@
+"""Rotary position embeddings (RoPE), llama-style interleaved-half variant.
+
+Frequencies are computed in fp32 (tiny tables, huge dynamic range for
+theta=500k at 500k positions) and applied in the activation dtype.
+Supports absolute position offsets for decode (query at position ``pos``
+against a cache of earlier keys).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies, fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               ) -> jnp.ndarray:
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions``.
+
+    ``positions`` has shape (..., seq) (broadcastable); angles are fp32,
+    the rotation is applied in fp32 and cast back (sin/cos of large
+    position×frequency products are precision-critical — bf16 angles at
+    position 500k would alias).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin,
+                               x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)

@@ -1,0 +1,196 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Implements the chunked SSD algorithm from Dao & Gu (arXiv:2405.21060):
+within a chunk of Q tokens the computation is an attention-like quadratic
+form (maps onto the MXU); across chunks a compact (H, P, N) state is carried
+through a `lax.scan` — O(S·Q) work, O(S) memory, constant-size decode state.
+
+Precision (DESIGN.md §4): `softplus(dt)`, the `dt*A` cumulative sums, all
+`exp` decays and the carried state are fp32 — these are long products of
+near-one factors, exactly the compounding-rounding shape MPX's
+`force_full_precision` exists for.  The large einsums (CB^T, score·x,
+state outer products) run in the compute dtype.
+
+Projections are kept separate per component (z, x, B, C, dt) instead of one
+fused in_proj: identical FLOPs, but each output gets its own logical
+sharding axis, which is what lets `ssm_inner` TP-shard while B/C/dt stay
+replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.sharding.rules import shard
+
+
+def ssd_spec(d_model: int, d_inner: int, n_heads: int, headdim: int,
+             d_state: int, conv_width: int = 4):
+    assert d_inner == n_heads * headdim
+    return {
+        "w_z": ParamSpec((d_model, d_inner), ("embed", "ssm_inner")),
+        "w_x": ParamSpec((d_model, d_inner), ("embed", "ssm_inner")),
+        "w_B": ParamSpec((d_model, d_state), ("embed", "ssm_state")),
+        "w_C": ParamSpec((d_model, d_state), ("embed", "ssm_state")),
+        "w_dt": ParamSpec((d_model, n_heads), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((conv_width, d_inner), (None, "ssm_inner"),
+                            init="normal", scale=0.5),
+        "conv_B": ParamSpec((conv_width, d_state), (None, "ssm_state"),
+                            init="normal", scale=0.5),
+        "conv_C": ParamSpec((conv_width, d_state), (None, "ssm_state"),
+                            init="normal", scale=0.5),
+        "A_log": ParamSpec((n_heads,), ("ssm_heads",), init="ones",
+                           scale=1.386),     # A = -exp(A_log) ≈ -4
+        "D": ParamSpec((n_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_heads",), init="ones",
+                             scale=-4.6),    # softplus ≈ 0.01
+        "norm_w": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_inner, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _conv1d(x, w, state=None):
+    """Depthwise causal conv along seq; x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    if state is not None:
+        hist = jnp.concatenate([state, x], axis=1)
+        new_state = hist[:, -(width - 1):]
+    else:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        hist = jnp.concatenate([pad, x], axis=1)
+        new_state = None
+    y = sum(hist[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    return jax.nn.silu(y), new_state
+
+
+def _gated_rmsnorm(w, y, z):
+    """Mamba-2's RMSNorm(y * silu(z)) with fp32 statistics."""
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(y32 * y32, axis=-1, keepdims=True) + 1e-6)
+    return ((y32 / rms) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,S,H,P) compute dtype; dt (B,S,H) fp32 (post-softplus);
+    a (H,) fp32 negative; bmat/cmat (B,S,N) compute dtype; d_skip (H,) fp32.
+    Returns y (B,S,H,P) in x.dtype.
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # zero-pad the tail: dt=0 makes padded steps exact no-ops for the
+        # state (decay exp(0·a)=1, input dt·x=0); padded y rows are sliced.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // q
+    dtype = x.dtype
+
+    # chunked views, scan axis first
+    xc = x.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((q, q), jnp.bool_))
+
+    def chunk_step(state, inp):
+        """state (B,H,P,N) fp32."""
+        x_c, dt_c, b_c, c_c = inp                    # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        da = dt_c * a                                 # (B,Q,H) fp32, negative
+        da_cs = jnp.cumsum(da, axis=1)                # (B,Q,H)
+        # --- intra-chunk (attention-like, causal) ---
+        cb = jnp.einsum("bln,bsn->bls", c_c, b_c).astype(jnp.float32)
+        # mask INSIDE the exponent: the upper triangle would be exp(+large)
+        # = inf, and the later 0-masking would turn its cotangent into
+        # 0 * inf = NaN.  exp(-1e30) = 0 kills value and gradient cleanly.
+        ldiff = da_cs[:, :, None, :] - da_cs[:, None, :, :]   # (B,l,s,H)
+        ldiff = jnp.where(tri[None, :, :, None], ldiff, -1e30)
+        scores = cb[..., None] * jnp.exp(ldiff)
+        y_diag = jnp.einsum("blsh,bsh,bshp->blhp",
+                            scores.astype(dtype), dt_c.astype(dtype), x_c)
+        # --- contribution of incoming state ---
+        state_decay = jnp.exp(da_cs)                  # (B,Q,H)
+        y_off = jnp.einsum("bln,bhpn->blhp", c_c,
+                           state.astype(dtype)) * state_decay[..., None].astype(dtype)
+        # --- state update ---
+        total = da_cs[:, -1, :]                       # (B,H)
+        decay_out = jnp.exp(total[:, None, :] - da_cs)  # (B,Q,H)
+        dx = (dt_c * decay_out)[..., None].astype(dtype) * x_c  # (B,Q,H,P)
+        state_new = state * jnp.exp(total)[:, :, None, None] \
+            + jnp.einsum("bqhp,bqn->bhpn", dx, b_c).astype(jnp.float32)
+        return state_new, (y_diag + y_off).astype(dtype)
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, state0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + d_skip.astype(dtype)[None, None, :, None] * x
+    return y[:, :s_orig] if pad else y
+
+
+def ssd_block_apply(params, xin, *, n_heads: int, headdim: int, d_state: int,
+                    chunk: int = 256, conv_width: int = 4,
+                    state: dict | None = None):
+    """Full Mamba-2 block.  xin (B,S,d_model) -> same shape.
+
+    ``state`` None for training; dict(conv_x/conv_B/conv_C, ssm) for decode
+    — returns (y, new_state) then.
+    """
+    dtype = xin.dtype
+    b, s, _ = xin.shape
+    z = xin @ params["w_z"].astype(dtype)
+    x = xin @ params["w_x"].astype(dtype)
+    bmat = xin @ params["w_B"].astype(dtype)
+    cmat = xin @ params["w_C"].astype(dtype)
+    dt_raw = (xin @ params["w_dt"].astype(dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    x = shard(x, ("batch", "seq", "ssm_inner"))
+
+    if state is None:
+        x, _ = _conv1d(x, params["conv_x"])
+        bmat, _ = _conv1d(bmat, params["conv_B"])
+        cmat, _ = _conv1d(cmat, params["conv_C"])
+        xh = x.reshape(b, s, n_heads, headdim)
+        y = ssd_chunked(xh, dt, a, bmat, cmat, params["D"], chunk)
+        y = y.reshape(b, s, n_heads * headdim)
+        y = _gated_rmsnorm(params["norm_w"], y, z)
+        out = y @ params["w_out"].astype(dtype)
+        return shard(out, ("batch", "seq", "embed"))
+
+    # ---- decode: O(1) state update ----
+    x, cs_x = _conv1d(x, params["conv_x"], state["conv_x"])
+    bmat, cs_b = _conv1d(bmat, params["conv_B"], state["conv_B"])
+    cmat, cs_c = _conv1d(cmat, params["conv_C"], state["conv_C"])
+    xh = x.reshape(b, 1, n_heads, headdim)[:, 0]        # (B,H,P)
+    da = jnp.exp(dt[:, 0] * a)                          # (B,H) fp32
+    # state' = exp(dt*A) state + dt * x ⊗ B
+    ssm = state["ssm"] * da[:, :, None, None] \
+        + jnp.einsum("bhp,bn->bhpn",
+                     (dt[:, 0][..., None].astype(dtype) * xh),
+                     bmat[:, 0]).astype(jnp.float32)
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], ssm.astype(dtype))
+    y = y + params["D"].astype(dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, n_heads * headdim)
+    y = _gated_rmsnorm(params["norm_w"], y, z)
+    out = y @ params["w_out"].astype(dtype)
+    return out, {"conv_x": cs_x, "conv_B": cs_b, "conv_C": cs_c, "ssm": ssm}
+
+
+def ssd_state_spec(batch: int, d_inner: int, d_state: int, n_heads: int,
+                   headdim: int, conv_width: int, dtype):
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, conv_width - 1, d_inner), dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, conv_width - 1, d_state), dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, conv_width - 1, d_state), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, n_heads, headdim, d_state),
+                                    jnp.float32),
+    }

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import adamw, sgd, adafactor, make_optimizer
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   linear_warmup_cosine)
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = ["adamw", "sgd", "adafactor", "make_optimizer",
+           "constant_schedule", "cosine_schedule", "linear_warmup_cosine",
+           "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,31 @@
+"""Global-norm gradient clipping (fp32 accumulation, as always)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filtering import is_inexact_array
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [x for x in jax.tree.leaves(tree) if is_inexact_array(x)]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    """Scale the whole tree so its global norm is <= max_norm.
+
+    Non-finite norms leave the tree untouched (the loss-scaling machinery
+    owns the skip decision; clipping must not turn an inf gradient into a
+    NaN-free lie).
+    """
+    norm = global_norm(tree)
+    scale = jnp.where(jnp.isfinite(norm),
+                      jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9)),
+                      1.0)
+    return jax.tree.map(
+        lambda x: x * scale.astype(x.dtype) if is_inexact_array(x) else x,
+        tree), norm

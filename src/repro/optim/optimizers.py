@@ -1,0 +1,165 @@
+"""Optimizers (optax ``init``/``update`` protocol, built from scratch).
+
+All state and arithmetic are fp32 — this is the "master weights + master
+moments" half of mixed-precision training; the half-precision half lives in
+``mpx.filter_value_and_grad``.  ``update`` returns *updates* to be applied
+via ``mpx.apply_updates`` (or guarded via ``mpx.optimizer_update``).
+
+- :func:`adamw`     — decoupled weight decay, bias-corrected moments.
+- :func:`sgd`       — momentum SGD.
+- :func:`adafactor` — factored second moments for memory-constrained runs
+  (row/col statistics for rank-2+ params), a standard large-scale trick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filtering import is_inexact_array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params=None) -> (updates, new_state)
+
+
+def _treemap(f, *trees):
+    """Map over inexact leaves; None / static leaves pass through as None.
+
+    Keeps optimizers compatible with Equinox-style model pytrees where
+    ``filter_grad`` leaves ``None`` holes at non-differentiable leaves
+    (paper Example 2) as well as with pure array-dict framework models.
+    """
+    return jax.tree.map(
+        lambda *xs: f(*xs) if (xs[0] is not None
+                               and is_inexact_array(xs[0])) else None,
+        *trees, is_leaf=lambda x: x is None)
+
+
+def _zeros_like_f32(tree):
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32)
+        if is_inexact_array(x) else None, tree)
+
+
+def adamw(learning_rate=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule: Optional[Callable] = None) -> Optimizer:
+    lr_fn = schedule or (lambda step: jnp.asarray(learning_rate, jnp.float32))
+
+    def init(params):
+        return {"mu": _zeros_like_f32(params), "nu": _zeros_like_f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        mu = _treemap(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      grads, state["mu"])
+        nu = _treemap(lambda g, v: b2 * v + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32)), grads, state["nu"])
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = lr_fn(count)
+
+        def _upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay > 0 and p is not None:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        if params is not None and weight_decay > 0:
+            updates = jax.tree.map(
+                lambda m, v, p: _upd(m, v, p)
+                if (m is not None and is_inexact_array(m)) else None,
+                mu, nu, params, is_leaf=lambda x: x is None)
+        else:
+            updates = _treemap(lambda m, v: _upd(m, v, None), mu, nu)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def sgd(learning_rate=1e-2, momentum=0.9,
+        schedule: Optional[Callable] = None) -> Optimizer:
+    lr_fn = schedule or (lambda step: jnp.asarray(learning_rate, jnp.float32))
+
+    def init(params):
+        return {"mu": _zeros_like_f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        count = state["count"] + 1
+        mu = _treemap(lambda g, m: momentum * m + g.astype(jnp.float32),
+                      grads, state["mu"])
+        lr = lr_fn(count)
+        updates = _treemap(lambda m: -lr * m, mu)
+        return updates, {"mu": mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adafactor(learning_rate=1e-3, decay=0.8, eps=1e-30,
+              schedule: Optional[Callable] = None) -> Optimizer:
+    """Factored second moments: O(n+m) state for an (n,m) matrix instead of
+    O(n·m) — the memory-term lever for the largest configs (qwen 32B)."""
+    lr_fn = schedule or (lambda step: jnp.asarray(learning_rate, jnp.float32))
+
+    def _factored(x):
+        return is_inexact_array(x) and x.ndim >= 2
+
+    def init(params):
+        def _state(x):
+            if not is_inexact_array(x):
+                return None
+            if _factored(x):
+                return {"row": jnp.zeros(x.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(x.shape[:-2] + x.shape[-1:],
+                                         jnp.float32)}
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return {"stats": jax.tree.map(_state, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+        lr = lr_fn(count)
+
+        def _upd(g, st):
+            if g is None or not is_inexact_array(g):
+                return None, st
+            g32 = g.astype(jnp.float32)
+            sq = jnp.square(g32) + eps
+            if "row" in st:
+                row = beta * st["row"] + (1 - beta) * sq.mean(axis=-1)
+                col = beta * st["col"] + (1 - beta) * sq.mean(axis=-2)
+                rfac = row / jnp.maximum(row.mean(axis=-1, keepdims=True), eps)
+                prec = (rfac[..., None] * col[..., None, :]) ** -0.5
+                return -lr * g32 * prec, {"row": row, "col": col}
+            v = beta * st["v"] + (1 - beta) * sq
+            return -lr * g32 * v ** -0.5, {"v": v}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        out = [_upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = jax.tree.unflatten(treedef, [u for u, _ in out])
+        stats = jax.tree.unflatten(treedef, [s for _, s in out])
+        return updates, {"stats": stats, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(run_cfg) -> Optimizer:
+    """Build the optimizer named in a RunConfig."""
+    if run_cfg.optimizer == "adamw":
+        return adamw(run_cfg.learning_rate, run_cfg.beta1, run_cfg.beta2,
+                     weight_decay=run_cfg.weight_decay)
+    if run_cfg.optimizer == "sgd":
+        return sgd(run_cfg.learning_rate)
+    if run_cfg.optimizer == "adafactor":
+        return adafactor(run_cfg.learning_rate)
+    raise ValueError(f"unknown optimizer {run_cfg.optimizer!r}")

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of an int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr, jnp.float32) * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.asarray(lr, jnp.float32) * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm,
+                         cos(jnp.maximum(step - warmup_steps, 0)))
+    return fn

@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (MaxText-style) → PartitionSpecs.
+
+Every tensor in the framework names its dims with *logical* axes
+("batch", "embed", "heads", "mlp", "experts", ...).  A rule table maps each
+logical axis to zero or more *mesh* axes; :func:`resolve_spec` turns
+(logical axes, shape) into a ``PartitionSpec``, silently dropping any mesh
+axis that does not divide the dim or is absent from the mesh — the
+divisibility fallback that lets one rule table serve llama3 (8 KV heads on a
+16-way model axis ⇒ fall back) and qwen (40 heads ⇒ shard 16-way? no ⇒
+fall back to replicated + the "q_per_kv" trick) alike.
+
+A context manager installs (mesh, rules) process-wide so model code can call
+:func:`shard` on activations without threading mesh plumbing through every
+layer; with no context installed it is a no-op (single-CPU tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+#: Default rule table for the ("pod", "data", "model") production mesh.
+#: Order matters for multi-axis entries: first listed axis is the major one.
+DEFAULT_RULES: tuple[tuple[str, Any], ...] = (
+    ("batch", ("pod", "data")),
+    ("seq", None),                 # overridden to "model" for SP decode
+    ("embed", None),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("moe_mlp", "model"),          # TP inside experts (mixtral fallback)
+    ("experts", "model"),          # EP when expert count divides
+    ("moe_group", ("pod", "data")),  # GShard group dim == DP shards
+    ("vocab", "model"),
+    ("rnn", "model"),              # RG-LRU width
+    ("ssm_inner", "model"),        # mamba2 d_inner
+    ("ssm_heads", "model"),
+    ("ssm_state", None),
+    ("layers", None),              # scan-stacking dim
+    ("kv_seq", None),              # KV-cache seq dim (SP rules flip this)
+    ("patch", None),
+    ("img_embed", None),
+)
+
+_ctx = threading.local()
+
+
+def _get_ctx() -> tuple[Optional[Mesh], tuple]:
+    return getattr(_ctx, "mesh", None), getattr(_ctx, "rules", DEFAULT_RULES)
+
+
+def data_parallel_groups() -> int:
+    """Size of the data-parallel section of the installed mesh (pod×data).
+
+    MoE uses this as the GShard group count so token dispatch stays local
+    to each DP shard (no cross-data collectives).  1 when no mesh is
+    installed (single-device tests keep global-capacity semantics).
+    """
+    mesh, _ = _get_ctx()
+    if mesh is None:
+        return 1
+    return mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Sequence[tuple[str, Any]] = DEFAULT_RULES):
+    """Install (mesh, rules) for :func:`shard` / :func:`resolve_spec`."""
+    old = (getattr(_ctx, "mesh", None), getattr(_ctx, "rules", DEFAULT_RULES))
+    _ctx.mesh, _ctx.rules = mesh, tuple(rules)
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = old
+
+
+def rules_with(overrides: dict[str, Any],
+               base: Sequence[tuple[str, Any]] = DEFAULT_RULES,
+               ) -> tuple[tuple[str, Any], ...]:
+    """Return a rule table with some logical axes remapped."""
+    out, seen = [], set()
+    for name, tgt in base:
+        if name in overrides:
+            out.append((name, overrides[name]))
+        else:
+            out.append((name, tgt))
+        seen.add(name)
+    for name, tgt in overrides.items():
+        if name not in seen:
+            out.append((name, tgt))
+    return tuple(out)
+
+
+def _mesh_axes_for(logical: Optional[str], rules) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    for name, tgt in rules:
+        if name == logical:
+            if tgt is None:
+                return ()
+            return tgt if isinstance(tgt, tuple) else (tgt,)
+    return ()
+
+
+def resolve_spec(logical: Sequence[Optional[str]],
+                 shape: Sequence[int],
+                 mesh: Optional[Mesh] = None,
+                 rules=None) -> P:
+    """Logical axes + concrete shape → PartitionSpec with fallbacks.
+
+    A mesh axis is used only if (a) it exists in the mesh, (b) it is not
+    already consumed by an earlier dim of this tensor, and (c) the product
+    of chosen axis sizes divides the dim.
+    """
+    if mesh is None or rules is None:
+        cmesh, crules = _get_ctx()
+        mesh = mesh if mesh is not None else cmesh
+        rules = rules if rules is not None else crules
+    if mesh is None:
+        return P(*([None] * len(shape)))
+
+    used: set[str] = set()
+    parts = []
+    for dim, logical_name in zip(shape, logical):
+        chosen: list[str] = []
+        size = 1
+        for ax in _mesh_axes_for(logical_name, rules):
+            if ax in used or ax not in mesh.shape:
+                continue
+            if dim % (size * mesh.shape[ax]) != 0:
+                continue
+            chosen.append(ax)
+            size *= mesh.shape[ax]
+        for ax in chosen:
+            used.add(ax)
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return P(*parts)
+
+
+def named_sharding(logical: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Optional[Mesh] = None, rules=None,
+                   ) -> Optional[NamedSharding]:
+    if mesh is None:
+        mesh = _get_ctx()[0]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh, rules))
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply ``with_sharding_constraint`` from the installed context.
+
+    No-op when no mesh is installed (pure-CPU unit tests) or when tracing
+    shapes disagree with the logical rank (defensive: never crash a model
+    on a sharding annotation).
+    """
+    mesh, rules = _get_ctx()
+    if mesh is None or len(logical) != x.ndim:
+        return x
+    spec = resolve_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_pspecs(logical_tree: PyTree, shape_tree: PyTree, mesh: Mesh,
+                rules=DEFAULT_RULES) -> PyTree:
+    """Map matching (logical-axes tree, ShapeDtypeStruct tree) → NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sd: NamedSharding(
+            mesh, resolve_spec(lg, sd.shape, mesh, rules)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

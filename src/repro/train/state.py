@@ -1,0 +1,215 @@
+"""Train state construction + sharding derivation.
+
+The train state is a plain dict pytree::
+
+    {"params": ..., "opt_state": ..., "scaling": DynamicLossScaling|NoOp,
+     "step": int32[]}
+
+Every helper exists in an *abstract* form (ShapeDtypeStructs via
+``jax.eval_shape`` — used by the dry-run and by elastic checkpoint restore)
+and a *concrete* form (used by the trainer).  Shardings are derived from the
+model's logical-axis metadata (:mod:`repro.nn.param`) through the rule table
+(:mod:`repro.sharding.rules`); optimizer state inherits each parameter's
+logical axes via ``Optimizer``-specific mapping, with optional ZeRO-1
+augmentation (moments additionally sharded over the data axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as Pspec
+
+from repro import mpx
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tfm
+from repro.nn import param as P
+from repro.sharding import rules as R
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+
+def make_scaling(run: RunConfig):
+    if run.loss_scaling == "dynamic":
+        return mpx.DynamicLossScaling(run.init_scale,
+                                      period=run.scaling_period)
+    return mpx.NoOpLossScaling()
+
+
+def _compute_dtype(run: RunConfig):
+    from repro.core.policy import Policy
+    return Policy.parse(run.policy).compute_dtype
+
+
+def abstract_state(cfg: ModelConfig, run: RunConfig, optimizer) -> PyTree:
+    params = tfm.param_shapes(cfg)
+    opt_state = jax.eval_shape(optimizer.init, params)
+    if run.master_weights == "opt":
+        # bf16 working weights; fp32 master lives (data-sharded) in opt state
+        cdt = _compute_dtype(run)
+        opt_state = {"master": params, **opt_state}
+        params = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, cdt), params)
+    scaling = make_scaling(run)
+    scaling_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        scaling)
+    return {"params": params, "opt_state": opt_state,
+            "scaling": scaling_abs,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_state(key: jax.Array, cfg: ModelConfig, run: RunConfig,
+               optimizer) -> PyTree:
+    params = tfm.init_params(key, cfg)
+    opt_state = optimizer.init(params)
+    if run.master_weights == "opt":
+        opt_state = {"master": params, **opt_state}
+        params = jax.tree.map(
+            lambda p: p.astype(_compute_dtype(run)), params)
+    return {"params": params, "opt_state": opt_state,
+            "scaling": make_scaling(run),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# sharding derivation
+# --------------------------------------------------------------------------
+
+def _opt_state_logical(opt_state_shapes: PyTree, params_logical: PyTree,
+                       params_shapes: PyTree) -> PyTree:
+    """Logical axes for optimizer state: shape-match against the param.
+
+    Any state leaf whose shape equals its parameter's shape inherits the
+    parameter's logical axes (adam mu/nu, sgd momentum).  Leaves with
+    reduced shapes (adafactor row/col) inherit the surviving dims' axes.
+    Scalars are replicated.
+    """
+    flat_params = {id_path: (lg, sd.shape) for id_path, (lg, sd) in enumerate(
+        zip(jax.tree.leaves(params_logical,
+                            is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.leaves(params_shapes)))}
+    shapes_to_logical: dict[tuple, tuple] = {}
+    for lg, shp in flat_params.values():
+        shapes_to_logical.setdefault(shp, lg)
+        # reduced variants for factored stats
+        if len(shp) >= 2:
+            shapes_to_logical.setdefault(shp[:-1], lg[:-1])
+            shapes_to_logical.setdefault(shp[:-2] + shp[-1:],
+                                         lg[:-2] + lg[-1:])
+
+    def _lg(sd):
+        return shapes_to_logical.get(sd.shape, (None,) * len(sd.shape))
+
+    return jax.tree.map(_lg, opt_state_shapes)
+
+
+def _zero1_spec(spec: Pspec, shape, mesh: Mesh) -> Pspec:
+    """Add the data axis to the first free, divisible dim (ZeRO-1)."""
+    if "data" not in mesh.shape or not shape:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p in parts:
+        for ax in (p if isinstance(p, tuple) else (p,)):
+            if ax:
+                used.add(ax)
+    if "data" in used:
+        return spec
+    dsize = mesh.shape["data"]
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        cur = p if isinstance(p, tuple) else ((p,) if p else ())
+        size = 1
+        for ax in cur:
+            size *= mesh.shape[ax]
+        if dim % (size * dsize) == 0:
+            parts[i] = tuple(cur) + ("data",) if cur else "data"
+            return Pspec(*parts)
+    return spec
+
+
+def make_grad_sharder(cfg: ModelConfig):
+    """ZeRO-2-style constraint: gradients sharded over (data, model).
+
+    Applied inside the microbatch-accumulation loop, this turns the per-
+    microbatch gradient all-reduce into a reduce-scatter (half the bytes)
+    and shrinks the fp32 accumulator by the data-axis size — for
+    mixtral-8x7b that is an 11.7 GiB -> 0.73 GiB temp reduction
+    (EXPERIMENTS.md §Perf iteration A-5).  No-op without a mesh.
+    """
+    from repro.nn import param as nn_param
+    logical = nn_param.logical_axes(tfm.abstract_params(cfg))
+
+    def sharder(grads):
+        mesh, rules = R._get_ctx()
+        if mesh is None:
+            return grads
+
+        def _c(lg, g):
+            if g is None:
+                return g
+            spec = R.resolve_spec(lg, g.shape, mesh, rules)
+            spec = _zero1_spec(spec, g.shape, mesh)
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, spec))
+
+        return jax.tree.map(
+            _c, logical, grads,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    return sharder
+
+
+def state_shardings(cfg: ModelConfig, run: RunConfig, optimizer,
+                    mesh: Mesh) -> PyTree:
+    """NamedSharding tree matching :func:`abstract_state`'s structure."""
+    rules = R.rules_with(dict(cfg.rules_overrides))
+    params_shapes = tfm.param_shapes(cfg)
+    params_logical = P.logical_axes(tfm.abstract_params(cfg))
+    param_sh = R.tree_pspecs(params_logical, params_shapes, mesh, rules)
+
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    if run.master_weights == "opt":
+        opt_shapes = {"master": params_shapes, **opt_shapes}
+    opt_logical = _opt_state_logical(opt_shapes, params_logical,
+                                     params_shapes)
+
+    def _opt_sh(lg, sd):
+        spec = R.resolve_spec(lg, sd.shape, mesh, rules)
+        if run.zero1:
+            spec = _zero1_spec(spec, sd.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    opt_sh = jax.tree.map(
+        _opt_sh, opt_logical, opt_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+    repl = NamedSharding(mesh, Pspec())
+    scaling_abs = jax.tree.map(lambda x: repl, make_scaling(run))
+    return {"params": param_sh, "opt_state": opt_sh,
+            "scaling": scaling_abs, "step": repl}
+
+
+def batch_shardings(batch_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Batch arrays shard dim0 over ("pod","data") with divisibility check."""
+
+    def _sh(sd):
+        logical = ("batch",) + (None,) * (len(sd.shape) - 1)
+        return NamedSharding(mesh, R.resolve_spec(logical, sd.shape, mesh,
+                                                  R.DEFAULT_RULES))
+
+    return jax.tree.map(_sh, batch_shapes)
+
+
+def with_shardings(abstract: PyTree, shardings: PyTree) -> PyTree:
+    """Attach shardings to ShapeDtypeStructs (for ``.lower()`` arguments)."""
+    return jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        abstract, shardings)

@@ -1,0 +1,166 @@
+"""Fault-tolerant trainer: checkpoint/restart, SIGTERM, step watchdog.
+
+The production loop every launcher entry point drives:
+
+- builds (or **resumes**) sharded train state on the given mesh,
+- jits the MPX train step with explicit in/out shardings + donation,
+- checkpoints every N steps (async) including **data-iterator state** and
+  the loss-scaling state — a resumed run replays the identical batch and
+  scaling schedule (tested bit-exact),
+- installs a SIGTERM/SIGINT handler: on preemption the current state is
+  checkpointed synchronously before exit (standard TPU-fleet etiquette),
+- runs a **step watchdog**: a step exceeding ``watchdog_s`` marks the run
+  unhealthy and raises after checkpointing — in a fleet, the scheduler
+  relaunches and the run resumes from the last checkpoint; on restart with
+  a different device count, elastic restore re-shards (see Checkpointer).
+  This is the restart-based straggler/failure mitigation appropriate to
+  synchronous SPMD (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import Prefetcher
+from repro.sharding import rules as R
+from repro.train import state as S
+from repro.train.steps import make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    log_every: int = 10
+    watchdog_s: float = 0.0        # 0 = disabled
+    prefetch: int = 2
+
+
+class WatchdogTimeout(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, optimizer, data,
+                 tcfg: TrainerConfig, mesh=None):
+        self.cfg, self.run, self.optimizer = cfg, run, optimizer
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.data = Prefetcher(data, tcfg.prefetch) if tcfg.prefetch else data
+        self.ckpt = (Checkpointer(tcfg.ckpt_dir, tcfg.ckpt_keep)
+                     if tcfg.ckpt_dir else None)
+        self._preempted = False
+        self._prev_handlers = {}
+        self.rules = R.rules_with(dict(cfg.rules_overrides))
+
+        self.state_shardings = (
+            S.state_shardings(cfg, run, optimizer, mesh) if mesh else None)
+        step_fn = make_train_step(cfg, run, optimizer)
+        if mesh is not None:
+            self._step = jax.jit(step_fn,
+                                 in_shardings=(self.state_shardings, None),
+                                 out_shardings=(self.state_shardings, None),
+                                 donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.state = self._init_or_resume()
+        self.metrics_history: list[dict] = []
+
+    # ------------------------------------------------------------------ init
+    def _init_or_resume(self) -> PyTree:
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            abstract = S.abstract_state(self.cfg, self.run, self.optimizer)
+            state, extra = self.ckpt.restore(
+                abstract, shardings=self.state_shardings)
+            if "data" in extra and hasattr(self.data, "load_state"):
+                self.data.load_state(extra["data"])
+            print(f"[trainer] resumed from step {int(state['step'])}")
+            return state
+        key = jax.random.key(self.run.seed)
+        with R.axis_rules(self.mesh, self.rules):
+            state = S.init_state(key, self.cfg, self.run, self.optimizer)
+            if self.state_shardings is not None:
+                state = jax.device_put(state, self.state_shardings)
+        return state
+
+    # ----------------------------------------------------------- preemption
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._prev_handlers[sig] = signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _restore_signals(self):
+        for sig, h in self._prev_handlers.items():
+            signal.signal(sig, h)
+
+    def _checkpoint(self, sync: bool = False):
+        if self.ckpt is None:
+            return
+        extra = {}
+        if hasattr(self.data, "state"):
+            extra["data"] = self.data.state()
+        step = int(jax.device_get(self.state["step"]))
+        if sync:
+            self.ckpt.save(step, self.state, extra)
+        else:
+            self.ckpt.save_async(step, self.state, extra)
+
+    # ------------------------------------------------------------------ fit
+    def fit(self) -> list[dict]:
+        self._install_signals()
+        try:
+            start = int(jax.device_get(self.state["step"]))
+            ctx = R.axis_rules(self.mesh, self.rules)
+            with ctx:
+                for step in range(start, self.tcfg.total_steps):
+                    t0 = time.time()
+                    batch = self.data.next_batch()
+                    self.state, metrics = self._step(self.state, batch)
+                    if (self.tcfg.log_every and
+                            (step + 1) % self.tcfg.log_every == 0):
+                        m = {k: float(np.asarray(v))
+                             for k, v in metrics.items()}
+                        m["step"] = step + 1
+                        m["step_time_s"] = time.time() - t0
+                        self.metrics_history.append(m)
+                        print(f"[trainer] step {step+1} "
+                              f"loss={m['loss']:.4f} "
+                              f"scale={m.get('loss_scale', 1):.0f} "
+                              f"({m['step_time_s']*1e3:.0f}ms)")
+                    dt = time.time() - t0
+                    if self.tcfg.watchdog_s and dt > self.tcfg.watchdog_s:
+                        self._checkpoint(sync=True)
+                        raise WatchdogTimeout(
+                            f"step {step+1} took {dt:.1f}s > "
+                            f"{self.tcfg.watchdog_s}s — checkpointed; "
+                            "relaunch to resume")
+                    if (self.ckpt is not None and
+                            (step + 1) % self.tcfg.ckpt_every == 0):
+                        self._checkpoint()
+                    if self._preempted:
+                        print("[trainer] preemption signal — checkpointing")
+                        self._checkpoint(sync=True)
+                        return self.metrics_history
+            self._checkpoint(sync=True)
+            return self.metrics_history
+        finally:
+            if self.ckpt is not None:
+                self.ckpt.wait()
+            if hasattr(self.data, "close"):
+                self.data.close()
+            self._restore_signals()

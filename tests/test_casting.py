@@ -1,0 +1,86 @@
+"""MPX casting semantics (paper §3.1–3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import mpx
+
+
+def test_cast_tree_floats_only():
+    key = jax.random.key(0)
+    tree = {"w": jnp.ones((4, 4), jnp.float32),
+            "ids": jnp.arange(3, dtype=jnp.int32),
+            "mask": jnp.array([True, False]),
+            "key": key,
+            "static": "name",
+            "n": 7}
+    out = mpx.cast_tree(tree, jnp.bfloat16)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["ids"].dtype == jnp.int32
+    assert out["mask"].dtype == jnp.bool_
+    assert out["key"] is key            # PRNG keys untouched (paper §3.1)
+    assert out["static"] == "name" and out["n"] == 7
+
+
+def test_cast_roundtrip_structure():
+    tree = {"a": [jnp.ones(3), (jnp.zeros(2), None)], "b": jnp.arange(4)}
+    out = mpx.cast_to_float16(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+
+
+def test_convenience_casts():
+    x = {"w": jnp.ones(3, jnp.float32)}
+    assert mpx.cast_to_float16(x)["w"].dtype == jnp.float16
+    assert mpx.cast_to_bfloat16(x)["w"].dtype == jnp.bfloat16
+    assert mpx.cast_to_float32(mpx.cast_to_float16(x))["w"].dtype == jnp.float32
+
+
+def test_half_dtype_global():
+    mpx.set_half_dtype(jnp.float16)
+    try:
+        assert mpx.cast_to_half_precision(
+            {"w": jnp.ones(2)})["w"].dtype == jnp.float16
+    finally:
+        mpx.set_half_dtype(jnp.bfloat16)
+    with pytest.raises(ValueError):
+        mpx.set_half_dtype(jnp.float32)
+
+
+def test_cast_function_inputs_and_outputs():
+    def f(x, y):
+        assert x.dtype == jnp.bfloat16 and y.dtype == jnp.bfloat16
+        return x @ y
+
+    g = mpx.cast_function(f, jnp.bfloat16, return_dtype=jnp.float32)
+    out = g(jnp.ones((2, 3)), jnp.ones((3, 2)))
+    assert out.dtype == jnp.float32
+
+
+def test_force_full_precision_softmax():
+    # bf16 softmax of large values overflows exp without fp32 internals
+    x = jnp.asarray([60000.0, 0.0, -60000.0], jnp.float16)
+    safe = mpx.force_full_precision(jax.nn.softmax, x.dtype)(x)
+    assert safe.dtype == jnp.float16
+    assert np.all(np.isfinite(np.asarray(safe, np.float32)))
+    np.testing.assert_allclose(np.asarray(safe, np.float32)[0], 1.0,
+                               atol=1e-3)
+
+
+def test_force_full_precision_inside_jit():
+    @jax.jit
+    def f(x):
+        return mpx.force_full_precision(jnp.mean, x.dtype)(x)
+
+    x = jnp.full((1000,), 3.0, jnp.bfloat16)
+    np.testing.assert_allclose(float(f(x)), 3.0, rtol=1e-2)
+
+
+def test_policy_parse():
+    p = mpx.Policy.parse("params=float32,compute=bfloat16,output=float32")
+    assert p == mpx.MIXED_BF16
+    assert mpx.Policy.parse("p=f32,c=f16,o=f32") == mpx.MIXED_F16
+    assert mpx.Policy.parse("f32") == mpx.FULL_F32
+    assert mpx.MIXED_F16.needs_loss_scaling
+    assert not mpx.MIXED_BF16.needs_loss_scaling
+    assert mpx.MIXED_BF16.is_mixed and not mpx.FULL_F32.is_mixed

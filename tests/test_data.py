@@ -1,0 +1,79 @@
+"""Data pipeline: determinism, shard slicing, checkpointable iteration."""
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import (MemmapTokens, Prefetcher, SyntheticTokens,
+                                 make_token_file)
+
+
+def _cfg():
+    return registry.get_smoke_config("llama3-8b")
+
+
+def test_synthetic_deterministic():
+    a = SyntheticTokens(_cfg(), batch=4, seq=8, seed=1)
+    b = SyntheticTokens(_cfg(), batch=4, seq=8, seed=1)
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba["inputs"], bb["inputs"])
+
+
+def test_synthetic_state_resume():
+    a = SyntheticTokens(_cfg(), batch=4, seq=8, seed=1)
+    a.next_batch(); a.next_batch()
+    st = a.state()
+    want = a.next_batch()
+    b = SyntheticTokens(_cfg(), batch=4, seq=8, seed=99)
+    b.load_state(st)
+    got = b.next_batch()
+    np.testing.assert_array_equal(want["inputs"], got["inputs"])
+
+
+def test_shards_disjoint_and_partition():
+    full = SyntheticTokens(_cfg(), batch=8, seq=8, seed=2)
+    s0 = SyntheticTokens(_cfg(), batch=8, seq=8, seed=2, shard_id=0,
+                         num_shards=2)
+    s1 = SyntheticTokens(_cfg(), batch=8, seq=8, seed=2, shard_id=1,
+                         num_shards=2)
+    b0, b1 = s0.next_batch(), s1.next_batch()
+    assert b0["inputs"].shape[0] == 4 and b1["inputs"].shape[0] == 4
+    assert not np.array_equal(b0["inputs"], b1["inputs"])
+
+
+def test_frontends_have_right_keys():
+    hub = registry.get_smoke_config("hubert-xlarge")
+    b = SyntheticTokens(hub, batch=2, seq=8).next_batch()
+    assert set(b) == {"features", "targets"}
+    vlm = registry.get_smoke_config("phi-3-vision-4.2b")
+    b = SyntheticTokens(vlm, batch=2, seq=8).next_batch()
+    assert set(b) == {"inputs", "targets", "patches"}
+
+
+def test_memmap_tokens(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    make_token_file(path, 10000, vocab=128, seed=0)
+    it = MemmapTokens(path, batch=4, seq=16, seed=1)
+    b = it.next_batch()
+    assert b["inputs"].shape == (4, 16) and b["targets"].shape == (4, 16)
+    # next-token alignment
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["targets"][:, :-1])
+    # determinism via state
+    st = it.state()
+    want = it.next_batch()
+    it2 = MemmapTokens(path, batch=4, seq=16, seed=1)
+    it2.load_state(st)
+    np.testing.assert_array_equal(want["inputs"], it2.next_batch()["inputs"])
+
+
+def test_prefetcher_preserves_order_and_state():
+    src = SyntheticTokens(_cfg(), batch=4, seq=8, seed=5)
+    ref = SyntheticTokens(_cfg(), batch=4, seq=8, seed=5)
+    pf = Prefetcher(src, depth=2)
+    try:
+        for _ in range(5):
+            np.testing.assert_array_equal(pf.next_batch()["inputs"],
+                                          ref.next_batch()["inputs"])
+        # state counts consumed batches, not produced ones
+        assert pf.state()["step"] == 5
+    finally:
+        pf.close()

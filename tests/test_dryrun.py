@@ -1,0 +1,129 @@
+"""Dry-run machinery on a reduced (4×4 and 2×2×2) host-device mesh.
+
+The full 512-device production matrix runs via
+``python -m repro.launch.dryrun --all`` (results under results/dryrun/);
+these tests prove the same code path end to end — lowering, compiling,
+memory/cost analysis, collective parsing, multi-pod axis — inside pytest
+using subprocesses with a forced host device count.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import hlo
+
+
+# --------------------------------------------------------------------------
+# HLO collective parser (pure text — no devices needed)
+# --------------------------------------------------------------------------
+
+SAMPLE_HLO = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[4,4]<=[16]
+  %ag = bf16[8,128]{1,0} all-gather(%y), dimensions={0}
+  %rs.2 = f32[256]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%p, %q)
+  %cp = u32[4]{0} collective-permute(%r), source_target_pairs={{0,1}}
+  %notacoll = f32[9999]{0} add(%a, %b)
+  %ar-start = f32[10]{0} all-reduce-start(%w)
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    stats = hlo.collective_stats(SAMPLE_HLO)
+    assert stats["all-reduce"]["bytes"] == 1024 * 512 * 4 + 10 * 4
+    assert stats["all-gather"]["bytes"] == 8 * 128 * 2
+    assert stats["reduce-scatter"]["bytes"] == 256 * 4
+    assert stats["all-to-all"]["bytes"] == 2 * 16 * 16 * 4
+    assert stats["collective-permute"]["bytes"] == 4 * 4
+    assert hlo.collective_bytes(SAMPLE_HLO) == sum(
+        v["bytes"] for v in stats.values())
+
+
+def test_roofline_terms():
+    r = hlo.Roofline(flops_per_dev=197e12, bytes_per_dev=819e9,
+                     coll_bytes_per_dev=0.0, chips=4, model_flops=4 * 197e12)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory")
+    assert r.useful_ratio == pytest.approx(1.0)
+    assert r.mfu == pytest.approx(1.0)
+
+
+def test_model_flops():
+    assert hlo.model_flops_per_step(1e9, 1e6, "train") == 6e15
+    assert hlo.model_flops_per_step(1e9, 1e6, "serve") == 2e15
+    assert hlo.model_flops_per_step(1e9, 1e6, "train",
+                                    active_params=5e8) == 3e15
+
+
+# --------------------------------------------------------------------------
+# end-to-end dry-run on small meshes (subprocess: needs fresh XLA_FLAGS)
+# --------------------------------------------------------------------------
+
+_DRYRUN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n)d"
+    import json
+    from repro.launch import dryrun as D
+    from repro.launch.mesh import make_host_mesh
+    from repro.configs import registry
+    mesh = make_host_mesh(%(mesh)s)
+    cfg = registry.get_smoke_config("%(arch)s")
+    rec = D.dryrun_cell("%(arch)s", "%(shape)s", mesh=mesh, cfg=cfg,
+                        verbose=False)
+    assert rec["status"] == "ok", rec
+    assert rec["roofline"]["flops_per_dev"] > 0
+    assert rec["memory"]["temp_bytes"] >= 0
+    print("DRYRUN_OK", json.dumps(rec["roofline"]["dominant"]))
+""")
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, cwd=os.getcwd(), timeout=480)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_smoke():
+    out = _run(_DRYRUN_SCRIPT % dict(n=16, mesh="4, 4", arch="llama3-8b",
+                                     shape="train_4k"))
+    assert "DRYRUN_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_axis():
+    out = _run(_DRYRUN_SCRIPT % dict(n=8, mesh="2, 2, pod=2",
+                                     arch="mixtral-8x7b", shape="train_4k"))
+    assert "DRYRUN_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell():
+    out = _run(_DRYRUN_SCRIPT % dict(n=16, mesh="4, 4",
+                                     arch="recurrentgemma-9b",
+                                     shape="decode_32k"))
+    assert "DRYRUN_OK" in out
+
+
+def test_skip_rules():
+    from repro.configs import registry, shapes
+    cases = {
+        ("llama3-8b", "long_500k"): False,
+        ("mixtral-8x7b", "long_500k"): True,
+        ("mamba2-130m", "long_500k"): True,
+        ("recurrentgemma-9b", "long_500k"): True,
+        ("gemma2-2b", "long_500k"): False,     # global layers unbounded
+        ("hubert-xlarge", "decode_32k"): False,
+        ("hubert-xlarge", "prefill_32k"): True,
+        ("phi-3-vision-4.2b", "decode_32k"): True,
+    }
+    for (arch, shape), want in cases.items():
+        ok, reason = shapes.cell_status(registry.get_config(arch), shape)
+        assert ok == want, (arch, shape, reason)

@@ -1,0 +1,135 @@
+"""filter_grad / filter_value_and_grad / optimizer_update (paper §3.4–3.5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import mpx
+
+
+def _loss(model, batch):
+    pred = batch @ model["w"]
+    return mpx.force_full_precision(jnp.mean)((pred - 1.0) ** 2)
+
+
+def _setup():
+    model = {"w": jnp.linspace(-1, 1, 8).reshape(4, 2), "name": "toy"}
+    batch = jnp.arange(32, dtype=jnp.float32).reshape(8, 4) / 32.0
+    return model, batch
+
+
+def test_filter_grad_matches_fp32():
+    model, batch = _setup()
+    scaling = mpx.DynamicLossScaling(2.0 ** 12)
+    new_s, finite, grads = mpx.filter_grad(_loss, scaling)(model, batch)
+    assert bool(finite)
+    assert grads["w"].dtype == jnp.float32
+    gref = jax.grad(lambda m: _loss({**m, "name": "x"}, batch))(
+        {"w": model["w"]})["w"]
+    np.testing.assert_allclose(np.asarray(grads["w"]), np.asarray(gref),
+                               rtol=0.05, atol=1e-4)
+
+
+def test_value_and_grad_returns_unscaled_fp32_loss():
+    model, batch = _setup()
+    scaling = mpx.DynamicLossScaling(2.0 ** 12)
+    _, _, value, grads = mpx.filter_value_and_grad(_loss, scaling)(model,
+                                                                   batch)
+    ref = float(_loss(model, batch))
+    assert value.dtype == jnp.float32
+    np.testing.assert_allclose(float(value), ref, rtol=0.05)
+
+
+def test_has_aux():
+    def loss_aux(model, batch):
+        loss = _loss(model, batch)
+        return loss, {"n": batch.shape[0]}
+
+    model, batch = _setup()
+    scaling = mpx.DynamicLossScaling(2.0 ** 12)
+    s, finite, grads, aux = mpx.filter_grad(loss_aux, scaling,
+                                            has_aux=True)(model, batch)
+    assert aux["n"] == 8
+    s2, finite2, (val, aux2), g2 = mpx.filter_value_and_grad(
+        loss_aux, scaling, has_aux=True)(model, batch)
+    assert aux2["n"] == 8 and val.dtype == jnp.float32
+
+
+def test_overflow_shrinks_scaling_and_reports_nonfinite():
+    model, batch = _setup()
+    mpx.set_half_dtype(jnp.float16)
+    try:
+        # loss stays fp16 (no force_full_precision) so a 2^30 scale overflows
+        def raw_loss(model, batch):
+            pred = batch @ model["w"]
+            return jnp.mean((pred - 1.0) ** 2)
+
+        scaling = mpx.DynamicLossScaling(2.0 ** 30)
+        new_s, finite, grads = mpx.filter_grad(raw_loss, scaling)(model,
+                                                                  batch)
+        assert not bool(finite)
+        assert float(new_s.loss_scaling) == 2.0 ** 29
+    finally:
+        mpx.set_half_dtype(jnp.bfloat16)
+
+
+def test_use_mixed_precision_false_is_fp32():
+    model, batch = _setup()
+
+    def check_dtype_loss(m, b):
+        assert m["w"].dtype == jnp.float32
+        return _loss(m, b)
+
+    scaling = mpx.DynamicLossScaling(2.0)
+    _, finite, grads = mpx.filter_grad(check_dtype_loss, scaling,
+                                       use_mixed_precision=False)(model,
+                                                                  batch)
+    assert bool(finite)
+
+
+class _SGD:
+    def update(self, grads, state, params=None):
+        return jax.tree.map(lambda g: -0.5 * g, grads), state
+
+
+def test_optimizer_update_applies_when_finite():
+    model, batch = _setup()
+    grads = {"w": jnp.ones_like(model["w"]), "name": None}
+    m2, _ = mpx.optimizer_update(model, _SGD(), {}, grads, jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(m2["w"]),
+                               np.asarray(model["w"]) - 0.5)
+    assert m2["name"] == "toy"                 # static leaves carried
+
+
+def test_optimizer_update_skips_when_infinite():
+    model, batch = _setup()
+    grads = {"w": jnp.full_like(model["w"], jnp.inf), "name": None}
+    m2, _ = mpx.optimizer_update(model, _SGD(), {}, grads, jnp.asarray(False))
+    np.testing.assert_array_equal(np.asarray(m2["w"]), np.asarray(model["w"]))
+
+
+def test_filter_jit_with_static_leaves():
+    model, batch = _setup()
+
+    @mpx.filter_jit
+    def f(model, batch):
+        return _loss(model, batch)
+
+    a = float(f(model, batch))
+    b = float(f(model, batch))          # cached executable path
+    np.testing.assert_allclose(a, b)
+
+
+def test_paper_example2_pipeline():
+    """The exact call sequence of the paper's Example 2(b)."""
+    from repro.optim import sgd
+    model, batch = _setup()
+    optimizer = sgd(learning_rate=0.1, momentum=0.0)
+    opt_state = optimizer.init(model)
+    loss_scaling = mpx.DynamicLossScaling(2.0 ** 10)
+
+    for _ in range(5):
+        loss_scaling, grads_finite, grads = mpx.filter_grad(
+            _loss, loss_scaling)(model, batch)
+        model, opt_state = mpx.optimizer_update(
+            model, optimizer, opt_state, grads, grads_finite)
+    assert float(_loss(model, batch)) < float(_loss(_setup()[0], batch))

@@ -1,0 +1,95 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+executed in interpret mode on CPU (the TPU-lowering path is identical
+modulo the interpreter)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 2, 1, 128),
+    (1, 512, 8, 8, 32),
+])
+def test_flash_attention_shapes_dtypes(b, s, h, kv, d, dtype):
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.key(1), (b, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.key(2), (b, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    ke, ve = (jnp.repeat(t, h // kv, axis=2) for t in (k, v))
+    want = ref.flash_attention_ref(q, ke, ve, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 96])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_flash_attention_masks_and_caps(causal, window, softcap):
+    b, s, h, d = 1, 256, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (b, s, h, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (b, s, h, d), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.05, rtol=0.05)
+
+
+def test_flash_attention_fp32_state_stability():
+    """Large logits: bf16-softmax would overflow; fp32 state must not."""
+    b, s, h, d = 1, 128, 1, 64
+    q = 30.0 * jax.random.normal(jax.random.key(0), (b, s, h, d),
+                                 jnp.bfloat16)
+    k = 30.0 * jax.random.normal(jax.random.key(1), (b, s, h, d),
+                                 jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (b, s, h, d), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    assert np.all(np.isfinite(np.asarray(got, np.float32)))
+
+
+@pytest.mark.parametrize("shape", [(128, 512), (3, 17, 256), (1000, 64),
+                                   (5, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(shape, dtype):
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    w = jax.random.normal(jax.random.key(1), shape[-1:], jnp.float32)
+    got = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=0.08)
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("n", [64, 1000, 65536 + 17])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_unscale_finite_kernel(n, dtype):
+    g = jax.random.normal(jax.random.key(0), (n,), dtype) * 100
+    out, ok = ops.unscale_and_check(g, 1.0 / 512.0, block=4096)
+    wout, wok = ref.unscale_finite_ref(g, 1.0 / 512.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(wout), rtol=1e-6)
+    assert bool(ok) and out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("bad", [jnp.inf, -jnp.inf, jnp.nan])
+def test_unscale_finite_detects(bad):
+    g = jnp.ones((10000,), jnp.float32).at[7777].set(bad)
+    _, ok = ops.unscale_and_check(g, 0.5, block=1024)
+    assert not bool(ok)
+
+
+def test_unscale_finite_padding_cannot_mask_infs():
+    # inf in the very last element, with padding after it
+    g = jnp.ones((4097,), jnp.float32).at[4096].set(jnp.inf)
+    _, ok = ops.unscale_and_check(g, 1.0, block=4096)
+    assert not bool(ok)

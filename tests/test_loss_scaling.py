@@ -1,0 +1,85 @@
+"""DynamicLossScaling behavior (paper §2.1, §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import mpx
+
+
+def test_scale_unscale_roundtrip():
+    ls = mpx.DynamicLossScaling(2.0 ** 11)
+    g = {"a": jnp.full((5,), 3.0), "ids": jnp.arange(2)}
+    out = ls.unscale(ls.scale(g))
+    np.testing.assert_allclose(np.asarray(out["a"]), 3.0, rtol=1e-6)
+    assert out["a"].dtype == jnp.float32       # unscale casts to fp32
+    assert out["ids"].dtype == jnp.int32
+
+
+def test_unscale_casts_half_to_fp32():
+    ls = mpx.DynamicLossScaling(1024.0)
+    g = {"a": jnp.full((3,), 8.0, jnp.float16)}
+    out = ls.unscale(g)
+    assert out["a"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out["a"]), 8.0 / 1024.0)
+
+
+def test_adjust_grows_after_period():
+    ls = mpx.DynamicLossScaling(1024.0, period=3, factor=2.0)
+    t = jnp.asarray(True)
+    for _ in range(2):
+        ls = ls.adjust(t)
+    assert float(ls.loss_scaling) == 1024.0      # not yet
+    ls = ls.adjust(t)
+    assert float(ls.loss_scaling) == 2048.0      # third consecutive
+    assert int(ls.counter) == 0                  # counter reset
+
+
+def test_adjust_shrinks_on_overflow_and_resets_counter():
+    ls = mpx.DynamicLossScaling(1024.0, period=3, factor=2.0)
+    ls = ls.adjust(jnp.asarray(True))
+    ls = ls.adjust(jnp.asarray(False))
+    assert float(ls.loss_scaling) == 512.0
+    assert int(ls.counter) == 0
+
+
+def test_adjust_clamps():
+    ls = mpx.DynamicLossScaling(1.0, period=1, factor=2.0,
+                                min_loss_scaling=1.0, max_loss_scaling=4.0)
+    ls = ls.adjust(jnp.asarray(False))
+    assert float(ls.loss_scaling) == 1.0          # min clamp
+    for _ in range(5):
+        ls = ls.adjust(jnp.asarray(True))
+    assert float(ls.loss_scaling) == 4.0          # max clamp
+
+
+def test_scaling_is_pytree_and_jittable():
+    ls = mpx.DynamicLossScaling(256.0, period=2)
+
+    @jax.jit
+    def step(ls, ok):
+        return ls.adjust(ok)
+
+    out = step(ls, jnp.asarray(False))
+    assert isinstance(out, mpx.DynamicLossScaling)
+    assert float(out.loss_scaling) == 128.0
+    # static fields preserved through flatten/unflatten
+    leaves, treedef = jax.tree.flatten(ls)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.period == 2
+
+
+def test_noop_scaling():
+    ls = mpx.NoOpLossScaling()
+    g = {"a": jnp.full((3,), 5.0, jnp.bfloat16)}
+    assert ls.scale(g)["a"].dtype == jnp.bfloat16
+    out = ls.unscale(g)
+    assert out["a"].dtype == jnp.float32
+    assert ls.adjust(jnp.asarray(False)) is not None
+
+
+def test_all_finite():
+    assert bool(mpx.all_finite({"a": jnp.ones(3)}))
+    assert not bool(mpx.all_finite({"a": jnp.array([1.0, jnp.inf])}))
+    assert not bool(mpx.all_finite({"a": jnp.array([jnp.nan])}))
+    assert bool(mpx.all_finite({"ids": jnp.arange(3)}))   # ints ignored
+    assert bool(mpx.all_finite({}))

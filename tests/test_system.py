@@ -1,0 +1,102 @@
+"""End-to-end system tests: the paper's pipeline on the framework stack.
+
+1. Mixed-precision training of a small LM memorizes synthetic data (loss
+   drops measurably in 40 steps) with dynamic loss scaling active.
+2. fp16 + dynamic scaling survives an injected overflow: the scale halves,
+   the step is skipped (params unchanged), training continues.
+3. Serving: greedy decode from the trained params is deterministic.
+4. fp32 vs bf16-mixed training converge to similar losses (the paper's
+   "no accuracy compromise" claim at smoke scale).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import mpx
+from repro.configs import registry, shapes
+from repro.configs.base import RunConfig
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+from repro.train import state as S
+from repro.train.steps import make_serve_step, make_train_step
+
+
+def test_train_then_serve_end_to_end():
+    cfg = registry.get_smoke_config("llama3-8b")
+    run = RunConfig(learning_rate=3e-3)
+    opt = make_optimizer(run)
+    st = S.init_state(jax.random.key(0), cfg, run, opt)
+    step = jax.jit(make_train_step(cfg, run, opt))
+    batch = shapes.make_batch(cfg, 8, 16)
+
+    losses = []
+    for _ in range(40):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+    assert float(m["loss_scale"]) >= 2.0 ** 15     # scaling stayed healthy
+
+    # --- serve from the trained params ---
+    params_bf16 = mpx.cast_to_bfloat16(st["params"])
+    serve = jax.jit(make_serve_step(cfg))
+
+    def generate():
+        cache = T.init_cache(cfg, 8, 16, jnp.bfloat16)
+        toks = batch["inputs"][:, :1]
+        outs = [toks]
+        for t in range(8):
+            toks, cache = serve(params_bf16, cache, toks, jnp.int32(t))
+            outs.append(toks)
+        return np.asarray(jnp.concatenate(outs, axis=1))
+
+    gen1, gen2 = generate(), generate()
+    assert gen1.shape == (8, 9)
+    np.testing.assert_array_equal(gen1, gen2)      # deterministic serving
+
+
+def test_overflow_step_is_skipped_and_training_recovers():
+    cfg = registry.get_smoke_config("gemma2-2b")
+    # init_scale 2^8: the default 2^15 overflows fp16 cotangents on this
+    # tiny model immediately (which dynamic scaling would walk down over
+    # a few steps — here we want a healthy step 1 to compare against).
+    run = RunConfig(learning_rate=1e-3, init_scale=2.0 ** 8,
+                    policy="params=float32,compute=float16,output=float32")
+    opt = make_optimizer(run)
+    st = S.init_state(jax.random.key(1), cfg, run, opt)
+    step = jax.jit(make_train_step(cfg, run, opt))
+    batch = shapes.make_batch(cfg, 4, 16)
+
+    st, m0 = step(st, batch)
+    assert bool(m0["grads_finite"])
+    scale_before = float(m0["loss_scale"])
+
+    # poison the params so the fp16 forward overflows -> skipped step
+    poisoned = dict(st)
+    poisoned["params"] = jax.tree.map(
+        lambda p: p * 1e30 if p.ndim >= 2 else p, st["params"])
+    st_bad, m_bad = step(poisoned, batch)
+    assert not bool(m_bad["grads_finite"])
+    assert float(m_bad["loss_scale"]) == scale_before / 2   # halved
+    np.testing.assert_array_equal(                          # step skipped
+        np.asarray(jax.tree.leaves(st_bad["params"])[0]),
+        np.asarray(jax.tree.leaves(poisoned["params"])[0]))
+
+    st, m1 = step(st, batch)                                # recovers
+    assert bool(m1["grads_finite"])
+
+
+def test_fp32_and_mixed_converge_similarly():
+    cfg = registry.get_smoke_config("starcoder2-3b")
+    batch = shapes.make_batch(cfg, 8, 16)
+    finals = {}
+    for name, policy in [("fp32", "f32"),
+                         ("mixed", "params=f32,compute=bf16,output=f32")]:
+        run = RunConfig(learning_rate=1e-3, policy=policy)
+        opt = make_optimizer(run)
+        st = S.init_state(jax.random.key(2), cfg, run, opt)
+        step = jax.jit(make_train_step(cfg, run, opt))
+        for _ in range(30):
+            st, m = step(st, batch)
+        finals[name] = float(m["loss"])
+    assert abs(finals["fp32"] - finals["mixed"]) / finals["fp32"] < 0.05, \
+        finals
