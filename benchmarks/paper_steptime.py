@@ -53,7 +53,8 @@ def _timed_step(cfg, batch: int, mixed: bool, iters: int = 4):
 
     # bytes from the compiled artifact (TPU roofline proxy)
     comp = step.lower(params, opt_state, images, labels).compile()
-    byts = float(comp.cost_analysis().get("bytes accessed", 0.0))
+    from repro.analysis.hlo import cost_dict
+    byts = float(cost_dict(comp).get("bytes accessed", 0.0))
     return wall, byts
 
 

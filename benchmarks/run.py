@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV, per the repo contract:
 - ``paper_fig3_steptime_*`` — Fig. 3: step time vs batch, fp32 vs mixed
 - ``loss_scaling_*``        — §3.3: dynamic-scaling overhead + fused kernel
 - ``attention_*``           — blocked-vs-plain attention (memory roofline)
+- ``serving_*``             — repro.serve engine: tok/s + TTFT vs slot count
 
 Run: ``PYTHONPATH=src python -m benchmarks.run``
 """
@@ -17,9 +18,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (attention_bench, loss_scaling_bench,
-                            paper_memory, paper_steptime)
+                            paper_memory, paper_steptime, serving_bench)
     modules = [paper_memory, paper_steptime, loss_scaling_bench,
-               attention_bench]
+               attention_bench, serving_bench]
     print("name,us_per_call,derived")
     failed = False
     for mod in modules:

@@ -1,24 +1,42 @@
-"""Batched serving with a KV cache and continuous-batching-lite scheduling.
+"""Batched serving via ``repro.serve``: the engine as a thin client.
 
 Serves a small llama-style model in bf16 (weights cast once at load — the
-inference half of mixed precision): a request queue feeds a fixed set of
-decode slots; finished sequences free their slot for the next request, so
-the jitted single-token `serve_step` runs at full batch occupancy — the
-decode_32k / long_500k dry-run cells lower exactly this function.
+inference half of mixed precision) through the :class:`repro.serve.ServeEngine`
+subsystem: a paged bf16 KV-cache pool (fixed-size pages, per-sequence page
+tables, pages reserved on admit and freed on retire), true chunked prefill
+(prompts run through the model ``--chunk`` tokens at a time via the batched
+``serve_forward`` step, not token-by-token decode), continuous batching
+(finished sequences retire mid-flight and waiting requests are admitted the
+same step), and fp32 sampling from bf16 logits.
+
+Usage sketch (what this script does)::
+
+    from repro import mpx, serve
+    from repro.models import transformer as T
+
+    params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
+    engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128,
+                               page_size=16, chunk_size=32,
+                               sampling=serve.SamplingParams())  # greedy
+    for prompt in prompts:
+        engine.submit(prompt, max_new=32)
+    for result in engine.drain():          # continuous batching inside
+        print(result.request_id, result.tokens, result.metrics.ttft)
+    print(engine.stats.summary())          # tok/s, TTFT, occupancy
+
+Stochastic sampling: pass ``serve.SamplingParams(temperature=0.8,
+top_k=40, top_p=0.95)`` — all transforms run in fp32.
 
 Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import mpx
+from repro import mpx, serve
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.train.steps import make_serve_step
 
 SERVE_MODEL = ModelConfig(
     name="serve-20m", family="dense",
@@ -36,69 +54,42 @@ def main():
                     help="concurrent decode slots (batch size)")
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size (tokens)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (tokens per prefill step)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
 
     cfg = SERVE_MODEL
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    engine = serve.ServeEngine(
+        cfg, params, n_slots=args.slots, max_seq=args.max_seq,
+        page_size=args.page_size, chunk_size=args.chunk,
+        sampling=serve.SamplingParams(temperature=args.temperature,
+                                      top_k=args.top_k, top_p=args.top_p))
 
     rng = np.random.default_rng(0)
-    queue = [{"id": i,
-              "prompt": rng.integers(1, cfg.vocab_size,
-                                     rng.integers(4, 12)).tolist()}
-             for i in range(args.requests)]
-    done = []
+    for _ in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              rng.integers(4, 12)).tolist()
+        engine.submit(prompt, max_new=args.max_new)
 
-    # slot state: one shared batched KV cache; per-slot bookkeeping
-    cache = T.init_cache(cfg, args.slots, args.max_seq, jnp.bfloat16)
-    slots = [None] * args.slots
-    tokens = jnp.zeros((args.slots, 1), jnp.int32)
-    pos = 0
-    t0 = time.perf_counter()
-    steps = 0
+    for res in engine.drain():
+        ttft = res.metrics.ttft
+        print(f"req {res.request_id:2d}: prompt[{len(res.prompt)}] -> "
+              f"{len(res.tokens)} tokens: {res.tokens[:8]}... "
+              f"(ttft {ttft * 1e3:.0f}ms)")
 
-    def admit():
-        nonlocal tokens
-        for s in range(args.slots):
-            if slots[s] is None and queue:
-                req = queue.pop(0)
-                # prefill-by-decode: feed prompt tokens one step at a time
-                slots[s] = {"id": req["id"], "prompt": req["prompt"],
-                            "fed": 0, "out": [], "born": pos}
-                tokens = tokens.at[s, 0].set(req["prompt"][0])
-                slots[s]["fed"] = 1
-
-    admit()
-    while any(slots) or queue:
-        next_tok, cache = serve_step(params, cache, tokens, jnp.int32(pos))
-        steps += 1
-        pos += 1
-        nt = np.asarray(next_tok)
-        for s in range(args.slots):
-            st = slots[s]
-            if st is None:
-                continue
-            if st["fed"] < len(st["prompt"]):          # still prefilling
-                tokens = tokens.at[s, 0].set(st["prompt"][st["fed"]])
-                st["fed"] += 1
-            else:                                      # generating
-                tok = int(nt[s, 0])
-                st["out"].append(tok)
-                tokens = tokens.at[s, 0].set(tok)
-                if len(st["out"]) >= args.max_new or pos >= args.max_seq - 1:
-                    done.append(st)
-                    slots[s] = None
-        admit()
-        if pos >= args.max_seq - 1:
-            break
-
-    dt = time.perf_counter() - t0
-    for st in sorted(done, key=lambda s: s["id"]):
-        print(f"req {st['id']:2d}: prompt[{len(st['prompt'])}] -> "
-              f"{len(st['out'])} tokens: {st['out'][:8]}...")
-    total = sum(len(s["out"]) for s in done)
-    print(f"\n{len(done)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/max(dt,1e-9):.0f} tok/s, {steps} batched steps, "
+    s = engine.stats.summary()
+    print(f"\n{int(s['requests'])} requests, {int(s['new_tokens'])} tokens "
+          f"in {s['elapsed_s']:.2f}s ({s['tok_per_s']:.0f} tok/s, "
+          f"{int(s['prefill_steps'])} prefill + "
+          f"{int(s['decode_steps'])} decode steps, "
+          f"{100 * s['mean_occupancy']:.0f}% occupancy, "
           f"{args.slots} slots)")
 
 

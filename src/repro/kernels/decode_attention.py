@@ -5,7 +5,11 @@ K/V (B, S, K, D).  Unlike prefill flash attention the arithmetic intensity
 is O(1) FLOPs/byte — the kernel is purely HBM-bandwidth-bound streaming the
 cache — so the design goal is: touch every cache byte exactly once, in
 bf16, with fp32 softmax state in scratch, masked by the *current length*
-(a scalar-prefetch operand, so one compiled kernel serves every position).
+(an SMEM operand, so one compiled kernel serves every position).  Length is
+either a scalar (uniform batch) or a (B,) vector — the ragged case that
+continuous batching produces: every slot of the serving batch sits at its
+own position, and each (batch, kv-head) grid row masks by its own slot's
+length.
 
 Grid: (B·K, S/block_k) — K-block innermost, fp32 (m, l, acc) carried in
 VMEM scratch across K steps; GQA handled by keeping the q-group dim G=H/K
@@ -25,7 +29,8 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, block_k: int, scale: float):
+                   m_scr, l_scr, acc_scr, *, block_k: int, scale: float,
+                   n_kv: int):
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
 
@@ -35,7 +40,8 @@ def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    length = length_ref[0]
+    # grid axis 0 is b * n_kv + kv_head: recover this row's batch slot
+    length = length_ref[pl.program_id(0) // n_kv]
     k_start = ki * block_k
 
     @pl.when(k_start < length)
@@ -67,27 +73,33 @@ def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
 
 def decode_attention(q, k, v, length, *, block_k: int = 512,
                      interpret: bool = False):
-    """q (B,H,D) vs cache k/v (B,S,K,D), valid prefix ``length`` (scalar).
+    """q (B,H,D) vs cache k/v (B,S,K,D), valid prefix ``length``.
 
-    Returns (B,H,D).  K divides H; the rolling-buffer window layout of the
-    framework's local-attention caches is handled by the caller (positions
-    beyond ``length`` are masked here; wrap-around caches pass length=S).
+    ``length`` is a scalar (uniform batch) or a (B,) vector (ragged
+    continuous batch — each slot masked by its own prefix; a slot with
+    length 0 outputs zeros).  Returns (B,H,D).  K divides H; the
+    rolling-buffer window layout of the framework's local-attention caches
+    is handled by the caller (positions beyond ``length`` are masked here;
+    wrap-around caches pass length=S).
     """
     b, h, d = q.shape
     s, kv = k.shape[1], k.shape[2]
     g = h // kv
     scale = 1.0 / math.sqrt(d)
-    block_k = min(block_k, s)
-    assert s % block_k == 0, (s, block_k)
+    # largest power-of-two block that divides S (gcd since block_k is a
+    # power of two) — arbitrary page-pool lengths must not crash
+    block_k = math.gcd(min(block_k, s), s)
 
     qf = q.reshape(b, kv, g, d).transpose(0, 1, 2, 3).reshape(b * kv, g, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
-    length_arr = jnp.asarray(length, jnp.int32).reshape(1)
+    length_arr = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (b,))
 
     grid = (b * kv, s // block_k)
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, block_k=block_k, scale=scale),
+        functools.partial(_decode_kernel, block_k=block_k, scale=scale,
+                          n_kv=kv),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -108,14 +120,6 @@ def decode_attention(q, k, v, length, *, block_k: int = 512,
 
 
 def decode_attention_ref(q, k, v, length):
-    """Pure-jnp oracle: masked softmax attention for one query token."""
-    b, h, d = q.shape
-    s, kv = k.shape[1], k.shape[2]
-    ke = jnp.repeat(k, h // kv, axis=2)
-    ve = jnp.repeat(v, h // kv, axis=2)
-    scores = jnp.einsum("bhd,bshd->bhs", q, ke).astype(jnp.float32)
-    scores = scores / math.sqrt(d)
-    mask = jnp.arange(s)[None, None, :] < length
-    scores = jnp.where(mask, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhs,bshd->bhd", probs, ve)
+    """Pure-jnp oracle (scalar or (B,) ragged ``length``): see kernels/ref."""
+    from repro.kernels import ref
+    return ref.decode_attention_ref(q, k, v, length)

@@ -38,6 +38,27 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def decode_attention_ref(q, k, v, lengths) -> jnp.ndarray:
+    """One query token per slot vs a ragged KV cache (continuous batching).
+
+    q (B, H, D), k/v (B, S, K, D) with K dividing H (GQA expanded here),
+    ``lengths`` a scalar or (B,) vector of valid prefix lengths.  fp32
+    scores/softmax, compute-dtype matmuls — the oracle for the ragged
+    serving hot path in ``repro.kernels.decode_attention``.
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    ke = jnp.repeat(k, h // kv, axis=2)
+    ve = jnp.repeat(v, h // kv, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, ke).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    lengths_b = jnp.asarray(lengths, jnp.int32).reshape(-1, 1, 1)
+    scores = jnp.where(jnp.arange(s)[None, None, :] < lengths_b,
+                       scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bshd->bhd", probs, ve)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jnp.ndarray:
     """(..., D) RMSNorm with fp32 statistics, output in x.dtype."""
     x32 = x.astype(jnp.float32)

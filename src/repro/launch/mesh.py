@@ -8,24 +8,36 @@ seeing one CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 tags mesh axes for explicit sharding; Auto == old default
+    from jax.sharding import AxisType
+
+    def _auto_axes(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: every axis is implicitly Auto
+    AxisType = None
+
+    def _auto_axes(n: int) -> dict:
+        return {}
+
+
+def make_mesh(shape, names):
+    """``jax.make_mesh`` with all axes Auto, across jax versions."""
+    return jax.make_mesh(shape, names, **_auto_axes(len(names)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: 16×16 per pod; 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small explicit mesh for tests (requires forced host device count)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def single_device_mesh():

@@ -16,6 +16,9 @@ Public API (all pure functions; ``params`` is a nested dict pytree):
 - ``loss_fn(params, cfg, batch)``          -> (loss, metrics)   [MPX-ready]
 - ``abstract_cache(cfg, batch, max_seq)``  -> decode-state tree (ShapeDtype)
 - ``decode(params, cfg, cache, tokens, pos)`` -> (logits, new_cache)
+- ``init_paged_cache(cfg, n_pages, page_size)`` -> paged K/V pool tree
+- ``serve_forward(params, cfg, pages, table, tokens, start, valid)``
+  -> (logits, new_pages)   [chunked prefill / ragged decode, repro.serve]
 
 Precision: the *caller* (``mpx.filter_value_and_grad``) casts params and
 batch to the compute dtype; this module only pins the known-fragile spots to
@@ -312,6 +315,119 @@ def _block_decode(cfg: ModelConfig, kind: str, p: PyTree, st: PyTree,
             y = apply_norm(cfg.norm, p["post_mlp_norm"], y)
         x = x + y
     return x, st
+
+
+# ==========================================================================
+# paged serving path (chunked prefill + ragged decode, repro.serve)
+# ==========================================================================
+
+def _require_paged_support(cfg: ModelConfig) -> None:
+    kinds = set(cfg.layer_kinds())
+    if not kinds <= {"attn", "local_attn"}:
+        raise ValueError(
+            "paged serving supports attention-only stacks; "
+            f"{cfg.name} has layer kinds {sorted(kinds)}")
+
+
+def abstract_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> PyTree:
+    """Paged K/V pool stand-ins mirroring the scan/tail parameter layout.
+
+    One (n_pages, page_size, K, D) pool pair per attention layer; scan
+    groups carry the usual stacked leading dim.  All layers share one page
+    table (each has its own pool array), so the serve scheduler allocates
+    pages once per sequence.
+    """
+    _require_paged_support(cfg)
+    n_groups, rem = _layout(cfg)
+    leaf = lambda: attention.paged_cache_spec(  # noqa: E731
+        n_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    cache: dict = {}
+    if n_groups > 0:
+        group = {f"b{i}": leaf() for i in range(len(cfg.pattern))}
+        cache["scan"] = _stack_sds(group, n_groups)
+    for j in range(len(rem)):
+        cache[f"tail{j}"] = leaf()
+    return cache
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_paged_cache(cfg, n_pages, page_size, dtype),
+                        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
+                 page_table, x: jnp.ndarray, positions, valid, *,
+                 page_size: int, use_kernel: bool):
+    h = apply_norm(cfg.norm, p["pre_norm"], x)
+    y, pages = attention.paged_attend(
+        p["attn"], pages, page_table, h, positions, valid,
+        page_size=page_size, n_heads=cfg.n_heads,
+        window=cfg.window if kind == "local_attn" else 0,
+        cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+        use_kernel=use_kernel)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["post_mix_norm"], y)
+    x = x + y
+    if cfg.mlp != "none":
+        h = apply_norm(cfg.norm, p["mlp_norm"], x)
+        if cfg.moe_experts > 0:
+            y, _ = moe_lib.moe_apply(
+                p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                kind=cfg.mlp, capacity_factor=2.0)
+        else:
+            y = mlp_lib.mlp_apply(cfg.mlp, p["mlp"], h)
+        if cfg.post_norm:
+            y = apply_norm(cfg.norm, p["post_mlp_norm"], y)
+        x = x + y
+    return x, pages
+
+
+def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
+                  page_table: jnp.ndarray, tokens: jnp.ndarray,
+                  start: jnp.ndarray, valid: jnp.ndarray, *,
+                  page_size: int, use_kernel: bool = False,
+                  ) -> tuple[jnp.ndarray, PyTree]:
+    """Unified serving step over a paged KV cache.
+
+    tokens (B, C) with per-slot chunk ``start`` positions (B,) and ``valid``
+    (B,) real-token counts (0 disables a slot).  C=1 is a decode step
+    (start = current length); C>1 is a chunked-prefill step.  Returns
+    (logits (B, C, V), new pages); the caller samples from the last valid
+    chunk position of each slot.
+    """
+    _require_paged_support(cfg)
+    dtype = params["embed"][next(iter(params["embed"]))].dtype
+    x = embedding.embed_tokens(params["embed"], cfg, tokens, dtype)
+    positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    n_groups, rem = _layout(cfg)
+    new_pages: dict = {}
+
+    if n_groups > 0:
+        def group_body(x, scanned):
+            gparams, gpages = scanned
+            new_gpages = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, new_gpages[f"b{i}"] = _block_serve(
+                    cfg, kind, gparams[f"b{i}"], gpages[f"b{i}"],
+                    page_table, x, positions, valid,
+                    page_size=page_size, use_kernel=use_kernel)
+            return x, new_gpages
+
+        x, new_pages["scan"] = jax.lax.scan(
+            group_body, x, (params["scan"], pages["scan"]))
+    for j, kind in enumerate(rem):
+        x, new_pages[f"tail{j}"] = _block_serve(
+            cfg, kind, params[f"tail{j}"], pages[f"tail{j}"],
+            page_table, x, positions, valid,
+            page_size=page_size, use_kernel=use_kernel)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = embedding.logits_fn(params["embed"], params.get("unembed", {}),
+                                 cfg, x)
+    return logits, new_pages
 
 
 def decode(params: PyTree, cfg: ModelConfig, cache: PyTree,

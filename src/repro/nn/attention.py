@@ -287,3 +287,108 @@ def decode_step(params, cache, x, pos, *, n_heads: int, window: int,
     if "bo" in params:
         y = y + params["bo"].astype(dtype)
     return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# paged KV cache (serving): fixed-size pages + per-slot page tables
+# --------------------------------------------------------------------------
+#
+# The serving engine (``repro.serve``) replaces the monolithic per-slot
+# (B, max_seq, K, D) cache slab with a shared pool of fixed-size pages:
+# each slot owns a row of a page table mapping logical page -> physical
+# page, so HBM is committed per admitted request, not per slot capacity.
+# Token position p of slot b lives at pages[table[b, p // page_size],
+# p % page_size].  Unallocated table entries hold the sentinel ``n_pages``
+# (writes there are dropped; reads are clamped and masked by length).
+
+def paged_cache_spec(n_pages: int, page_size: int, n_kv_heads: int,
+                     head_dim: int, dtype) -> dict:
+    """Abstract paged K/V pool layout for one attention layer."""
+    shape = (n_pages, page_size, n_kv_heads, head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def paged_write(pages: jnp.ndarray, vals: jnp.ndarray,
+                page_table: jnp.ndarray, positions: jnp.ndarray,
+                valid: jnp.ndarray, *, page_size: int) -> jnp.ndarray:
+    """Scatter ``vals`` (B, C, K, D) into ``pages`` (P, ps, K, D).
+
+    ``positions`` (B, C) are absolute token positions, ``valid`` (B,) the
+    number of real tokens per slot (suffix is padding).  Padding tokens and
+    slots whose table entry is the sentinel scatter out of bounds and are
+    dropped.
+    """
+    n_pages = pages.shape[0]
+    b, c = positions.shape
+    phys = jnp.take_along_axis(page_table, positions // page_size, axis=1)
+    off = positions % page_size
+    ok = jnp.arange(c)[None, :] < valid[:, None]
+    phys = jnp.where(ok, phys, n_pages)                      # OOB -> dropped
+    return pages.at[phys.reshape(-1), off.reshape(-1)].set(
+        vals.reshape((b * c,) + vals.shape[2:]), mode="drop")
+
+
+def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, ps, K, D), (B, Pmax) -> contiguous view (B, Pmax*ps, K, D).
+
+    The gather-based reference layout for attention: sentinel entries read
+    clamped garbage that the caller masks by length.
+    """
+    g = pages[page_table]
+    b, pmax, ps = g.shape[:3]
+    return g.reshape((b, pmax * ps) + g.shape[3:])
+
+
+def paged_attend(params, pages: dict, page_table: jnp.ndarray,
+                 x: jnp.ndarray, positions: jnp.ndarray, valid: jnp.ndarray,
+                 *, page_size: int, n_heads: int, window: int, cap: float,
+                 rope_theta: float, use_kernel: bool = False):
+    """Chunked-prefill / decode attention against a paged KV cache.
+
+    x (B, C, d) with per-token absolute ``positions`` (B, C) and ``valid``
+    (B,) real-token counts.  Writes the chunk's K/V into the pages, then
+    attends every query to its slot's full cached prefix, causal by
+    absolute position.  C=1 with valid=1 is exactly single-token decode;
+    C>1 is a prefill chunk.  Returns (y (B, C, d), new ``pages`` dict).
+
+    ``use_kernel`` routes the C=1 full-attention case through the Pallas
+    ragged-length decode kernel (TPU hot path); the default pure-jnp path
+    is numerically identical and runs everywhere.
+    """
+    dtype = x.dtype
+    q, k_new, v_new = _project_qkv(params, x, positions, rope_theta)
+    new_pages = {
+        "k": paged_write(pages["k"], k_new.astype(dtype), page_table,
+                         positions, valid, page_size=page_size),
+        "v": paged_write(pages["v"], v_new.astype(dtype), page_table,
+                         positions, valid, page_size=page_size),
+    }
+    k = paged_gather(new_pages["k"], page_table)             # (B, S, K, D)
+    v = paged_gather(new_pages["v"], page_table)
+    c = x.shape[1]
+    if use_kernel and c == 1 and window == 0 and cap <= 0:
+        from repro.kernels.decode_attention import decode_attention
+        lengths = positions[:, 0] + 1
+        out = decode_attention(q[:, 0], k, v, lengths,
+                               interpret=jax.default_backend() != "tpu")
+        out = out[:, None]                                   # (B, 1, H, D)
+    else:
+        kx = _expand_kv(k, n_heads)
+        vx = _expand_kv(v, n_heads)
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kx) * scale
+        scores = scores.astype(jnp.float32)
+        if cap > 0:
+            scores = cap * jnp.tanh(scores / cap)
+        idx = jnp.arange(k.shape[1])
+        ok = idx[None, None, :] <= positions[:, :, None]     # (B, C, S)
+        if window > 0:
+            ok &= idx[None, None, :] > positions[:, :, None] - window
+        scores = jnp.where(ok[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx)
+    y = jnp.einsum("bqhd,hdm->bqm", out, params["wo"].astype(dtype))
+    if "bo" in params:
+        y = y + params["bo"].astype(dtype)
+    return y, new_pages

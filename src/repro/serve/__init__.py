@@ -1,0 +1,51 @@
+"""repro.serve — mixed-precision inference engine.
+
+The serving half of the MPX discipline as a subsystem: bf16 weights and KV
+cache on the hot path, fp32 only where precision matters (softmax inside
+the model, sampling logits here).  Components:
+
+- :mod:`~repro.serve.cache`     — paged bf16 KV-cache pool (fixed-size
+  pages, per-sequence page tables, alloc on admit / free on retire)
+- :mod:`~repro.serve.scheduler` — continuous batching with chunked prefill
+- :mod:`~repro.serve.sampling`  — greedy/temperature/top-k/top-p in fp32
+- :mod:`~repro.serve.engine`    — the :class:`ServeEngine` facade
+  (``submit()`` / ``step()`` / ``drain()``)
+- :mod:`~repro.serve.metrics`   — TTFT / throughput / occupancy stats
+
+Quickstart::
+
+    from repro import mpx, serve
+    from repro.models import transformer as T
+
+    params = mpx.cast_to_bfloat16(T.init_params(key, cfg))
+    engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128)
+    for prompt in prompts:
+        engine.submit(prompt, max_new=32)
+    for result in engine.drain():
+        print(result.request_id, result.tokens)
+    print(engine.stats.summary())
+"""
+from repro.serve.cache import PagedKVCache
+from repro.serve.engine import RequestResult, ServeEngine
+from repro.serve.metrics import EngineStats, RequestMetrics
+from repro.serve.sampling import SamplingParams, make_sampler, sample_logits
+from repro.serve.scheduler import Request, Scheduler
+
+# the legacy monolithic-slab serving step, generalized to take
+# SamplingParams, lives with the train steps; re-export it here so
+# serving callers have one import surface.
+from repro.train.steps import make_serve_step
+
+__all__ = [
+    "EngineStats",
+    "PagedKVCache",
+    "Request",
+    "RequestMetrics",
+    "RequestResult",
+    "SamplingParams",
+    "Scheduler",
+    "ServeEngine",
+    "make_sampler",
+    "make_serve_step",
+    "sample_logits",
+]

@@ -1,0 +1,119 @@
+"""Paged bf16 KV-cache pool: fixed-size pages, per-slot page tables.
+
+The monolithic ``T.init_cache`` slab commits ``n_slots * max_seq`` of KV
+HBM up front whether slots are busy or not.  The paged pool commits memory
+per *admitted request* instead: a shared pool of ``num_pages`` fixed-size
+pages per attention layer, and a page table row per slot mapping logical
+page -> physical page.  Token position ``p`` of slot ``b`` lives at
+``pages[table[b, p // page_size], p % page_size]``.
+
+Bookkeeping (free list, tables) is host-side numpy — it mutates a few ints
+per request, never touches the device, and stays out of the jitted step.
+The device side is a pytree of page pools (one (num_pages, page_size, K, D)
+K and V array per attention layer, scan-stacked like the params) built by
+:func:`repro.models.transformer.init_paged_cache`; all layers share one
+table, so admission allocates pages once per sequence.
+
+Allocation policy: the full budget (prompt + max_new tokens) is reserved at
+admission, so a running request can never hit pool exhaustion mid-decode —
+admission control is the only backpressure point.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+class PagedKVCache:
+    """Device page pools + host allocator for ``n_slots`` decode slots.
+
+    The sentinel physical index ``num_pages`` marks unallocated table
+    entries: device-side writes through it are dropped, reads are clamped
+    and masked by sequence length.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 dtype=jnp.bfloat16):
+        if max_seq % page_size:
+            raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                             f"page_size {page_size}")
+        self.page_size = page_size
+        self.max_pages_per_slot = max_seq // page_size
+        self.num_pages = (num_pages if num_pages is not None
+                          else n_slots * self.max_pages_per_slot)
+        self.n_slots = n_slots
+        self.sentinel = self.num_pages
+        self.pages: PyTree = tfm.init_paged_cache(
+            cfg, self.num_pages, page_size, dtype)
+        self._free: List[int] = list(range(self.num_pages))
+        self._tables = np.full((n_slots, self.max_pages_per_slot),
+                               self.sentinel, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self._table_device = None        # invalidated on alloc/free
+
+    # -- allocation ---------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Number of pages a sequence of ``n_tokens`` tokens occupies."""
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self._free)
+
+    def admit(self, slot: int, n_tokens: int) -> bool:
+        """Reserve pages for ``n_tokens`` total tokens in ``slot``.
+
+        Returns False (allocating nothing) if the pool or the slot's table
+        row can't hold the request.
+        """
+        need = self.pages_for(n_tokens)
+        if self._owned[slot]:
+            raise ValueError(f"slot {slot} already holds pages")
+        if need > len(self._free) or need > self.max_pages_per_slot:
+            return False
+        got = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = got
+        self._tables[slot, :need] = got
+        self._table_device = None
+        return True
+
+    def retire(self, slot: int) -> None:
+        """Return the slot's pages to the free list."""
+        self._free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self._tables[slot, :] = self.sentinel
+        self._table_device = None
+
+    # -- views --------------------------------------------------------------
+
+    def table_device(self) -> jnp.ndarray:
+        """(n_slots, max_pages_per_slot) int32 page table on device."""
+        if self._table_device is None:
+            self._table_device = jnp.asarray(self._tables)
+        return self._table_device
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def check_invariants(self) -> None:
+        """No page is double-owned, free + owned covers the pool exactly."""
+        owned = [p for row in self._owned for p in row]
+        assert len(owned) == len(set(owned)), "double-allocated page"
+        assert not set(owned) & set(self._free), "page both owned and free"
+        assert len(owned) + len(self._free) == self.num_pages, "leaked page"
+        for slot, row in enumerate(self._owned):
+            mapped = [p for p in self._tables[slot] if p != self.sentinel]
+            assert mapped == row, (slot, mapped, row)

@@ -1,0 +1,140 @@
+"""The ServeEngine facade: submit() / step() / drain().
+
+Ties the subsystem together: the paged KV cache (device pools + host
+allocator), the continuous-batching scheduler (host plans), two jitted
+specializations of the unified ``serve_forward`` step (a chunk-wide
+prefill shape and a single-token decode shape — same traced function), and
+fp32 sampling.  Per-request TTFT and aggregate throughput/occupancy are
+recorded around every device call.
+
+Precision: params are expected pre-cast to the serving dtype (bf16); the
+KV pages are bf16; softmax inside the model and the sampling transform are
+fp32 — the inference half of the MPX discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serve.cache import PagedKVCache
+from repro.serve.metrics import EngineStats, RequestMetrics
+from repro.serve.sampling import SamplingParams, make_sampler
+from repro.serve.scheduler import Request, Scheduler
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """A finished request: generated tokens + lifecycle metrics."""
+    request_id: int
+    prompt: List[int]
+    tokens: List[int]
+    metrics: RequestMetrics
+
+
+class ServeEngine:
+    """Mixed-precision inference engine with paged KV cache.
+
+    ``submit()`` enqueues requests; ``step()`` runs one scheduler tick
+    (admit -> one batched prefill chunk or decode step -> retire finished);
+    ``drain()`` steps until idle and returns results ordered by request id.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, *,
+                 n_slots: int = 4, max_seq: int = 256,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 chunk_size: int = 32,
+                 sampling: SamplingParams = SamplingParams(),
+                 use_kernel: bool = False, seed: int = 0):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} does not support decode")
+        self.cfg = cfg
+        self.params = params
+        self.cache = PagedKVCache(cfg, n_slots, max_seq,
+                                  page_size=page_size, num_pages=num_pages)
+        self.scheduler = Scheduler(self.cache, chunk_size=chunk_size)
+        self.sampling = sampling
+        self.stats = EngineStats(n_slots)
+        self._sampler = make_sampler(sampling)
+        self._key = jax.random.key(seed)
+        self._next_id = 0
+        self._inflight: dict[int, RequestMetrics] = {}
+        self._results: List[RequestResult] = []
+
+        sampler = self._sampler
+
+        def raw_step(params, pages, table, tokens, start, valid, key):
+            logits, new_pages = tfm.serve_forward(
+                params, cfg, pages, table, tokens, start, valid,
+                page_size=page_size, use_kernel=use_kernel)
+            # each slot samples from its last valid chunk position in fp32
+            last = jnp.clip(valid - 1, 0)
+            batch = jnp.arange(tokens.shape[0])
+            sampled = sampler(logits[batch, last], key)
+            return sampled, new_pages
+
+        # one traced function, two compiled shapes: (B, chunk) and (B, 1)
+        self._device_step = jax.jit(raw_step, donate_argnums=(1,))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new: int = 32,
+               request_id: Optional[int] = None) -> int:
+        """Enqueue a request; returns its id."""
+        rid = self._next_id if request_id is None else request_id
+        self._next_id = max(self._next_id, rid) + 1
+        self.scheduler.submit(Request(rid, list(prompt), max_new))
+        self._inflight[rid] = RequestMetrics(
+            request_id=rid, prompt_len=len(prompt),
+            submit_time=time.perf_counter())
+        return rid
+
+    def step(self) -> List[RequestResult]:
+        """One scheduler tick.  Returns requests that finished this step."""
+        self.scheduler.admit()
+        if self.scheduler.busy_slots == 0:
+            return []
+        t0 = time.perf_counter()
+        kind, tokens, start, valid = self.scheduler.plan()
+        if self.sampling.is_greedy:
+            key = self._key
+        else:
+            self._key, key = jax.random.split(self._key)
+        sampled, self.cache.pages = self._device_step(
+            self.params, self.cache.pages, self.cache.table_device(),
+            jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(valid),
+            key)
+        sampled = np.asarray(sampled)                 # blocks on the device
+        now = time.perf_counter()
+
+        first_ids, finished = self.scheduler.commit(kind, valid, sampled)
+        for rid in first_ids:
+            self._inflight[rid].first_token_time = now
+        new_tokens = len(first_ids) if kind == "prefill" else int(
+            (valid > 0).sum())
+        results = []
+        for _, slot in finished:
+            rm = self._inflight.pop(slot.req.request_id)
+            rm.finish_time = now
+            rm.new_tokens = len(slot.out)
+            self.stats.record_finish(rm)
+            results.append(RequestResult(slot.req.request_id,
+                                         slot.req.prompt, slot.out, rm))
+        self.stats.record_step(kind, self.scheduler.busy_slots
+                               + len(finished), new_tokens, now - t0)
+        self._results.extend(results)
+        return results
+
+    def drain(self) -> List[RequestResult]:
+        """Run until queue and slots are empty; all results, by id."""
+        while self.scheduler.has_work:
+            self.step()
+        return sorted(self._results, key=lambda r: r.request_id)

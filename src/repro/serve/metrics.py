@@ -1,0 +1,103 @@
+"""Serving metrics: per-request TTFT / tok-s, aggregate throughput.
+
+Host-side plain Python — recorded around the jitted steps, never inside
+them.  ``EngineStats`` aggregates per-step records (occupancy, tokens,
+wall time) and per-request records (time-to-first-token, decode rate) into
+the summary the benchmarks and the example client print.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Lifecycle timestamps for one request (``time.perf_counter`` values)."""
+    request_id: int
+    prompt_len: int
+    submit_time: float
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    new_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Seconds from submit to first sampled token (prefill latency)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def decode_tok_per_s(self) -> Optional[float]:
+        """Generation rate after the first token."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.new_tokens <= 1:
+            return None
+        dt = self.finish_time - self.first_token_time
+        return (self.new_tokens - 1) / max(dt, 1e-9)
+
+
+def _percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile: smallest value covering >= q of the mass."""
+    vals = sorted(values)
+    idx = math.ceil(q * len(vals)) - 1
+    return vals[max(0, min(idx, len(vals) - 1))]
+
+
+class EngineStats:
+    """Aggregate counters the engine updates once per step / per finish."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.steps = 0
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.total_new_tokens = 0
+        self.total_prompt_tokens = 0
+        self.elapsed = 0.0
+        self._occupancy_sum = 0.0
+        self.finished: List[RequestMetrics] = []
+
+    def record_step(self, kind: str, busy_slots: int, new_tokens: int,
+                    dt: float) -> None:
+        self.steps += 1
+        if kind == "prefill":
+            self.prefill_steps += 1
+        else:
+            self.decode_steps += 1
+        self.total_new_tokens += new_tokens
+        self.elapsed += dt
+        self._occupancy_sum += busy_slots / self.n_slots
+
+    def record_finish(self, rm: RequestMetrics) -> None:
+        self.finished.append(rm)
+        self.total_prompt_tokens += rm.prompt_len
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self._occupancy_sum / self.steps if self.steps else 0.0
+
+    @property
+    def throughput_tok_per_s(self) -> float:
+        return self.total_new_tokens / max(self.elapsed, 1e-9)
+
+    def summary(self) -> Dict[str, float]:
+        ttfts = [rm.ttft for rm in self.finished if rm.ttft is not None]
+        out = {
+            "requests": float(len(self.finished)),
+            "steps": float(self.steps),
+            "prefill_steps": float(self.prefill_steps),
+            "decode_steps": float(self.decode_steps),
+            "new_tokens": float(self.total_new_tokens),
+            "prompt_tokens": float(self.total_prompt_tokens),
+            "elapsed_s": self.elapsed,
+            "tok_per_s": self.throughput_tok_per_s,
+            "mean_occupancy": self.mean_occupancy,
+        }
+        if ttfts:
+            out["ttft_mean_s"] = sum(ttfts) / len(ttfts)
+            out["ttft_p95_s"] = _percentile(ttfts, 0.95)
+        return out

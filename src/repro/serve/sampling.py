@@ -1,0 +1,85 @@
+"""Token sampling from bf16 logits, computed in fp32 (mpx policy).
+
+The model's head emits logits in the compute dtype (bf16 on the serving
+path).  Sampling is one of the paper's "known-fragile spots": softmax over
+a 100k-entry vocabulary in bf16 loses the tail, and temperature/top-p
+renormalization compounds it.  Every transform here upcasts once to fp32
+and stays there; only the sampled token ids leave.
+
+``SamplingParams`` is static configuration — ``make_sampler`` closes over
+it so the jitted step specializes (greedy compiles to a bare argmax with
+no PRNG traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Static sampling configuration.
+
+    temperature 0 means greedy (argmax); top_k 0 and top_p 1.0 disable the
+    respective truncations.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def _apply_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def _apply_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    vocab = logits.shape[-1]
+    sorted_l, sorted_idx = jax.lax.top_k(logits, vocab)
+    probs = jax.nn.softmax(sorted_l, axis=-1)
+    # keep every token whose preceding cumulative mass is < p (the first
+    # token always survives, even when its own probability exceeds p)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    sorted_l = jnp.where(cum_before < p, sorted_l, NEG_INF)
+    out = jnp.full_like(logits, NEG_INF)
+    batch = jnp.arange(logits.shape[0])[:, None]
+    return out.at[batch, sorted_idx].set(sorted_l)
+
+
+def sample_logits(logits: jnp.ndarray, key, sp: SamplingParams,
+                  ) -> jnp.ndarray:
+    """logits (B, V) any float dtype -> token ids (B,) int32, fp32 inside."""
+    l32 = logits.astype(jnp.float32)
+    if sp.is_greedy:
+        return jnp.argmax(l32, axis=-1).astype(jnp.int32)
+    l32 = l32 / sp.temperature
+    if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
+        l32 = _apply_top_k(l32, sp.top_k)
+    if sp.top_p < 1.0:
+        l32 = _apply_top_p(l32, sp.top_p)
+    return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)
+
+
+def make_sampler(sp: SamplingParams):
+    """Returns a jittable ``sampler(logits (B, V), key) -> (B,) int32``."""
+
+    def sampler(logits, key):
+        return sample_logits(logits, key, sp)
+
+    return sampler

@@ -1,0 +1,182 @@
+"""Continuous batching with chunked prefill.
+
+Host-side slot bookkeeping: a FIFO of waiting requests, ``n_slots``
+decode slots, and per-step batch plans for the engine's jitted steps.
+Admission is FCFS with full-budget page reservation (see
+:mod:`repro.serve.cache`); a finished request retires immediately and its
+slot/pages are re-admitted the same step — the batch never drains to
+refill, which is the whole point of continuous batching.
+
+Prefill is *chunked*: a prompt runs through the model ``chunk_size``
+tokens at a time via the batched ``serve_forward`` entry point (one matmul
+over the chunk), not token-by-token through the decode step.  Scheduling
+is prefill-priority: while any slot has unfed prompt tokens the step is a
+prefill chunk over those slots; otherwise it is a single-token decode over
+the generating slots.  Slots not participating in a step carry
+``valid = 0`` and are masked inside the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt`` is a list of token ids."""
+    request_id: int
+    prompt: List[int]
+    max_new: int = 32
+
+    def __post_init__(self):
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1: {self.max_new}")
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    fed: int = 0          # prompt tokens written to the cache so far
+    length: int = 0       # total cached tokens (prompt + fed generations)
+    out: List[int] = dataclasses.field(default_factory=list)
+    next_token: int = -1  # sampled but not yet fed to a decode step
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.req.max_new
+
+
+class Scheduler:
+    """Admission, chunk planning, and completion bookkeeping."""
+
+    def __init__(self, cache: PagedKVCache, chunk_size: int = 32):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
+        self.cache = cache
+        self.n_slots = cache.n_slots
+        self.chunk_size = chunk_size
+        self.max_seq = cache.max_pages_per_slot * cache.page_size
+        self.waiting: Deque[Request] = deque()
+        self.slots: List[Optional[_Slot]] = [None] * self.n_slots
+
+    # -- admission / eviction -----------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new
+        if total > self.max_seq:
+            raise ValueError(
+                f"request {req.request_id}: prompt {len(req.prompt)} + "
+                f"max_new {req.max_new} exceeds max_seq {self.max_seq}")
+        if self.cache.pages_for(total) > self.cache.num_pages:
+            # would never be admittable: drain() would spin forever
+            raise ValueError(
+                f"request {req.request_id}: needs "
+                f"{self.cache.pages_for(total)} pages, pool has only "
+                f"{self.cache.num_pages}")
+        self.waiting.append(req)
+
+    def admit(self) -> List[int]:
+        """Place waiting requests into free slots, FCFS.
+
+        Stops at the first request whose page reservation doesn't fit
+        (head-of-line order preserved — large requests are not starved by
+        later small ones).  Returns the admitted request ids.
+        """
+        admitted = []
+        for slot_id in range(self.n_slots):
+            if self.slots[slot_id] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            if not self.cache.admit(slot_id,
+                                    len(req.prompt) + req.max_new):
+                break
+            self.waiting.popleft()
+            self.slots[slot_id] = _Slot(req)
+            admitted.append(req.request_id)
+        return admitted
+
+    def _retire(self, slot_id: int) -> _Slot:
+        slot = self.slots[slot_id]
+        self.cache.retire(slot_id)
+        self.slots[slot_id] = None
+        return slot
+
+    # -- planning -----------------------------------------------------------
+
+    @property
+    def busy_slots(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.busy_slots > 0
+
+    def plan(self) -> Tuple[str, np.ndarray, np.ndarray, np.ndarray]:
+        """-> (kind, tokens (B, C), start (B,), valid (B,)) for one step.
+
+        kind "prefill": C = chunk_size, each prefilling slot feeds its next
+        prompt chunk.  kind "decode": C = 1, each generating slot feeds its
+        last sampled token.  valid = 0 masks a slot out of the step.
+        """
+        prefill = any(s is not None and s.prefilling for s in self.slots)
+        c = self.chunk_size if prefill else 1
+        tokens = np.zeros((self.n_slots, c), np.int32)
+        start = np.zeros(self.n_slots, np.int32)
+        valid = np.zeros(self.n_slots, np.int32)
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if prefill:
+                if not slot.prefilling:
+                    continue
+                chunk = slot.req.prompt[slot.fed:slot.fed + c]
+                tokens[slot_id, :len(chunk)] = chunk
+                start[slot_id] = slot.fed
+                valid[slot_id] = len(chunk)
+            else:
+                tokens[slot_id, 0] = slot.next_token
+                start[slot_id] = slot.length
+                valid[slot_id] = 1
+        return ("prefill" if prefill else "decode"), tokens, start, valid
+
+    # -- completion ---------------------------------------------------------
+
+    def commit(self, kind: str, valid: np.ndarray, sampled: Sequence[int],
+               ) -> Tuple[List[int], List[Tuple[int, _Slot]]]:
+        """Apply one step's sampled tokens to the slot state.
+
+        Returns (request ids that produced their first token this step,
+        finished (slot_id, slot) pairs — already retired).
+        """
+        first_token: List[int] = []
+        finished: List[Tuple[int, _Slot]] = []
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None or valid[slot_id] == 0:
+                continue
+            if kind == "prefill":
+                slot.fed += int(valid[slot_id])
+                slot.length = slot.fed
+                if not slot.prefilling:    # prompt fully cached: the last
+                    tok = int(sampled[slot_id])  # position's logits sampled
+                    slot.out.append(tok)
+                    slot.next_token = tok
+                    first_token.append(slot.req.request_id)
+            else:
+                tok = int(sampled[slot_id])
+                slot.out.append(tok)
+                slot.next_token = tok
+                slot.length += 1
+            if slot.done:
+                finished.append((slot_id, self._retire(slot_id)))
+        return first_token, finished

@@ -163,17 +163,35 @@ def make_eval_step(cfg: ModelConfig, run: RunConfig,
     return eval_step
 
 
-def make_serve_step(cfg: ModelConfig) -> Callable:
+def make_serve_step(cfg: ModelConfig, sampling=None) -> Callable:
     """``serve_step(params, cache, tokens, pos) -> (next_tokens, new_cache)``.
 
-    Params are expected pre-cast to the serving dtype (bf16); logits are
-    argmax-sampled in fp32.  This is the function the ``decode_*`` /
-    ``long_*`` dry-run cells lower and compile.
-    """
+    Params are expected pre-cast to the serving dtype (bf16); sampling runs
+    in fp32.  The default (``sampling=None`` or greedy
+    :class:`~repro.serve.sampling.SamplingParams`) keeps the historical
+    4-arg argmax signature — the function the ``decode_*`` / ``long_*``
+    dry-run cells lower and compile.  With stochastic ``SamplingParams``
+    the step takes a PRNG key: ``serve_step(params, cache, tokens, pos,
+    key)``.
 
-    def serve_step(params, cache, tokens, pos):
+    This is the monolithic-slab serving step; the paged-KV-cache engine in
+    :mod:`repro.serve` (which re-exports this) supersedes it for
+    continuous-batching workloads.
+    """
+    if sampling is None or sampling.is_greedy:
+        def serve_step(params, cache, tokens, pos):
+            logits, new_cache = tfm.decode(params, cfg, cache, tokens, pos)
+            next_tokens = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            return next_tokens.astype(jnp.int32), new_cache
+
+        return serve_step
+
+    from repro.serve.sampling import make_sampler  # lazy: avoid import cycle
+    sampler = make_sampler(sampling)
+
+    def serve_step(params, cache, tokens, pos, key):
         logits, new_cache = tfm.decode(params, cfg, cache, tokens, pos)
-        next_tokens = jnp.argmax(logits.astype(jnp.float32), axis=-1)
-        return next_tokens.astype(jnp.int32), new_cache
+        next_tokens = sampler(logits[:, -1], key)
+        return next_tokens[:, None], new_cache
 
     return serve_step

@@ -1,0 +1,8 @@
+"""Shared pytest configuration: custom marker registration."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (dry-run lowering, big sweeps)")
+    config.addinivalue_line(
+        "markers", "serve: repro.serve inference-engine tests")

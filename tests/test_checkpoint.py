@@ -97,8 +97,8 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint.checkpointer import Checkpointer
-    mesh = jax.make_mesh((%d, %d), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((%d, %d), ("data", "model"))
     ck = Checkpointer(sys.argv[1])
     tree_abs = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
     sh = {"w": NamedSharding(mesh, P("data", "model"))}

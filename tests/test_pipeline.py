@@ -14,11 +14,11 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh
     from repro.train.pipeline import gpipe
 
     S, M, B, D = 4, 8, 16, 32
-    mesh = jax.make_mesh((S,), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((S,), ("pipe",))
     key = jax.random.key(0)
     # stacked stage params: (S, D, D) weight + (S, D) bias
     w = jax.random.normal(key, (S, D, D)) / D ** 0.5

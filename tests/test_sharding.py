@@ -68,8 +68,8 @@ def test_shard_noop_without_mesh():
 
 def test_zero1_spec():
     from repro.train.state import _zero1_spec
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     # dim0 free and divisible by data=1 -> data added
     spec = _zero1_spec(P(None, "model"), (256, 128), mesh)
     assert spec == P("data", "model")
@@ -87,8 +87,8 @@ def test_state_shardings_cover_every_leaf():
     cfg = registry.get_smoke_config("mixtral-8x7b")
     run = RunConfig()
     opt = make_optimizer(run)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     sds = S.abstract_state(cfg, run, opt)
     sh = S.state_shardings(cfg, run, opt, mesh)
     # structural zip must succeed and give one sharding per leaf
