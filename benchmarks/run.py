@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV, per the repo contract:
 - ``paper_fig3_steptime_*`` — Fig. 3: step time vs batch, fp32 vs mixed
 - ``loss_scaling_*``        — §3.3: dynamic-scaling overhead + fused kernel
 - ``attention_*``           — blocked-vs-plain attention (memory roofline)
-- ``serving_*``             — repro.serve engine: tok/s + TTFT vs slot count
+- ``serving_*``             — repro.serve engine: tok/s + TTFT + inter-token
+  p50/p95 vs slot count
 
 Run: ``PYTHONPATH=src python -m benchmarks.run``
 """

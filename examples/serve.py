@@ -6,8 +6,10 @@ subsystem: a paged bf16 KV-cache pool (fixed-size pages, per-sequence page
 tables, pages reserved on admit and freed on retire), true chunked prefill
 (prompts run through the model ``--chunk`` tokens at a time via the batched
 ``serve_forward`` step, not token-by-token decode), continuous batching
-(finished sequences retire mid-flight and waiting requests are admitted the
-same step), and fp32 sampling from bf16 logits.
+with mixed prefill+decode steps (finished sequences retire mid-flight,
+waiting requests are admitted the same step, and decoding sequences keep
+emitting tokens while another slot prefills — bound per-step prefill work
+with ``--max-batched-tokens``), and fp32 sampling from bf16 logits.
 
 Usage sketch (what this script does)::
 
@@ -58,6 +60,9 @@ def main():
                     help="KV-cache page size (tokens)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="prefill chunk size (tokens per prefill step)")
+    ap.add_argument("--max-batched-tokens", type=int, default=None,
+                    help="per-step token budget (decode first, prefill "
+                         "fills the remainder; default: slots*chunk)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -69,6 +74,7 @@ def main():
     engine = serve.ServeEngine(
         cfg, params, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, chunk_size=args.chunk,
+        max_batched_tokens=args.max_batched_tokens,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p))
 
@@ -88,9 +94,13 @@ def main():
     print(f"\n{int(s['requests'])} requests, {int(s['new_tokens'])} tokens "
           f"in {s['elapsed_s']:.2f}s ({s['tok_per_s']:.0f} tok/s, "
           f"{int(s['prefill_steps'])} prefill + "
+          f"{int(s['mixed_steps'])} mixed + "
           f"{int(s['decode_steps'])} decode steps, "
           f"{100 * s['mean_occupancy']:.0f}% occupancy, "
           f"{args.slots} slots)")
+    if "itl_p50_s" in s:
+        print(f"inter-token latency: p50 {s['itl_p50_s']*1e3:.1f}ms, "
+              f"p95 {s['itl_p95_s']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

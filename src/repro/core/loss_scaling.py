@@ -123,7 +123,19 @@ class NoOpLossScaling:
     multiply-by-one away).
     """
 
-    loss_scaling = jnp.float32(1.0)
+    @property
+    def loss_scaling(self):
+        """Identity scale factor, materialized lazily.
+
+        A class-level ``jnp.float32(1.0)`` would allocate a device buffer
+        at *import* time — on the default device, before any user code can
+        set ``jax.default_device`` (or pick a backend at all).  Computing
+        it on access keeps the attribute contract (train steps read
+        ``scaling.loss_scaling`` for metrics) without touching a device at
+        import; under jit it folds to a constant exactly like the class
+        attribute did.
+        """
+        return jnp.float32(1.0)
 
     def tree_flatten(self):
         return (), ()

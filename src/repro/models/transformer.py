@@ -18,7 +18,8 @@ Public API (all pure functions; ``params`` is a nested dict pytree):
 - ``decode(params, cfg, cache, tokens, pos)`` -> (logits, new_cache)
 - ``init_paged_cache(cfg, n_pages, page_size)`` -> paged K/V pool tree
 - ``serve_forward(params, cfg, pages, table, tokens, start, valid)``
-  -> (logits, new_pages)   [chunked prefill / ragged decode, repro.serve]
+  -> (last-valid-position logits (B, V), new_pages)
+  [mixed chunked-prefill / ragged decode steps, repro.serve]
 
 Precision: the *caller* (``mpx.filter_value_and_grad``) casts params and
 batch to the compute dtype; this module only pins the known-fragile spots to
@@ -360,14 +361,14 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
                  page_table, x: jnp.ndarray, positions, valid, *,
-                 page_size: int, use_kernel: bool):
+                 page_size: int, use_kernel: bool, decode_only: bool):
     h = apply_norm(cfg.norm, p["pre_norm"], x)
     y, pages = attention.paged_attend(
         p["attn"], pages, page_table, h, positions, valid,
         page_size=page_size, n_heads=cfg.n_heads,
         window=cfg.window if kind == "local_attn" else 0,
         cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, decode_only=decode_only)
     if cfg.post_norm:
         y = apply_norm(cfg.norm, p["post_mix_norm"], y)
     x = x + y
@@ -389,14 +390,21 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                   page_table: jnp.ndarray, tokens: jnp.ndarray,
                   start: jnp.ndarray, valid: jnp.ndarray, *,
                   page_size: int, use_kernel: bool = False,
+                  decode_only: bool = False,
                   ) -> tuple[jnp.ndarray, PyTree]:
     """Unified serving step over a paged KV cache.
 
     tokens (B, C) with per-slot chunk ``start`` positions (B,) and ``valid``
-    (B,) real-token counts (0 disables a slot).  C=1 is a decode step
-    (start = current length); C>1 is a chunked-prefill step.  Returns
-    (logits (B, C, V), new pages); the caller samples from the last valid
-    chunk position of each slot.
+    (B,) real-token counts (0 disables a slot).  Each slot is independent:
+    one (B, C) step can mix prefill chunks (valid up to C) and single
+    decode tokens (valid = 1, start = current length) — the mixed-chunk
+    plans :mod:`repro.serve.scheduler` emits.  Returns (logits (B, V) for
+    each slot's LAST VALID chunk position — the only position serving ever
+    samples, so the vocab projection runs once per slot instead of once
+    per chunk position — and the new pages).  ``decode_only`` is a static
+    promise that every slot has valid <= 1, letting ``use_kernel`` route
+    pure-decode steps through the Pallas decode kernel without a separate
+    (B, 1) compiled shape.
     """
     _require_paged_support(cfg)
     dtype = params["embed"][next(iter(params["embed"]))].dtype
@@ -413,7 +421,8 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                 x, new_gpages[f"b{i}"] = _block_serve(
                     cfg, kind, gparams[f"b{i}"], gpages[f"b{i}"],
                     page_table, x, positions, valid,
-                    page_size=page_size, use_kernel=use_kernel)
+                    page_size=page_size, use_kernel=use_kernel,
+                    decode_only=decode_only)
             return x, new_gpages
 
         x, new_pages["scan"] = jax.lax.scan(
@@ -422,12 +431,18 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
         x, new_pages[f"tail{j}"] = _block_serve(
             cfg, kind, params[f"tail{j}"], pages[f"tail{j}"],
             page_table, x, positions, valid,
-            page_size=page_size, use_kernel=use_kernel)
+            page_size=page_size, use_kernel=use_kernel,
+            decode_only=decode_only)
 
+    # only each slot's last valid position is ever sampled: gather it
+    # before the unembed so the (d, V) projection runs per slot, not per
+    # padded chunk position (C-fold less vocab-matmul work per step)
+    last = jnp.clip(valid - 1, 0)
+    x = x[jnp.arange(x.shape[0]), last][:, None]             # (B, 1, d)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = embedding.logits_fn(params["embed"], params.get("unembed", {}),
                                  cfg, x)
-    return logits, new_pages
+    return logits[:, 0], new_pages
 
 
 def decode(params: PyTree, cfg: ModelConfig, cache: PyTree,

@@ -343,18 +343,27 @@ def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
 def paged_attend(params, pages: dict, page_table: jnp.ndarray,
                  x: jnp.ndarray, positions: jnp.ndarray, valid: jnp.ndarray,
                  *, page_size: int, n_heads: int, window: int, cap: float,
-                 rope_theta: float, use_kernel: bool = False):
+                 rope_theta: float, use_kernel: bool = False,
+                 decode_only: bool = False):
     """Chunked-prefill / decode attention against a paged KV cache.
 
     x (B, C, d) with per-token absolute ``positions`` (B, C) and ``valid``
     (B,) real-token counts.  Writes the chunk's K/V into the pages, then
     attends every query to its slot's full cached prefix, causal by
     absolute position.  C=1 with valid=1 is exactly single-token decode;
-    C>1 is a prefill chunk.  Returns (y (B, C, d), new ``pages`` dict).
+    C>1 is a prefill chunk (or a mixed-chunk serving step in which decode
+    slots carry valid=1).  Returns (y (B, C, d), new ``pages`` dict).
 
-    ``use_kernel`` routes the C=1 full-attention case through the Pallas
-    ragged-length decode kernel (TPU hot path); the default pure-jnp path
-    is numerically identical and runs everywhere.
+    ``use_kernel`` routes single-query full-attention steps through the
+    Pallas ragged-length decode kernel (TPU hot path); the default
+    pure-jnp path is numerically identical and runs everywhere.  The
+    kernel fires when C == 1, or when the caller statically promises
+    ``decode_only`` (every slot has valid <= 1 — the mixed-chunk
+    scheduler's pure-decode plans, which keep the one (B, C) compiled
+    shape): only chunk position 0 is live, so the kernel runs on q[:, 0]
+    and the padding positions output zeros.  Ragged-valid guard: slots
+    with valid == 0 get kernel length 0 (zeros out) instead of attending
+    one garbage position through a sentinel page-table entry.
     """
     dtype = x.dtype
     q, k_new, v_new = _project_qkv(params, x, positions, rope_theta)
@@ -367,12 +376,15 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
     k = paged_gather(new_pages["k"], page_table)             # (B, S, K, D)
     v = paged_gather(new_pages["v"], page_table)
     c = x.shape[1]
-    if use_kernel and c == 1 and window == 0 and cap <= 0:
+    if (use_kernel and (c == 1 or decode_only)
+            and window == 0 and cap <= 0):
         from repro.kernels.decode_attention import decode_attention
-        lengths = positions[:, 0] + 1
+        lengths = jnp.where(valid > 0, positions[:, 0] + 1, 0)
         out = decode_attention(q[:, 0], k, v, lengths,
                                interpret=jax.default_backend() != "tpu")
         out = out[:, None]                                   # (B, 1, H, D)
+        if c > 1:   # decode_only: padding positions contribute zeros
+            out = jnp.pad(out, ((0, 0), (0, c - 1), (0, 0), (0, 0)))
     else:
         kx = _expand_kv(k, n_heads)
         vx = _expand_kv(v, n_heads)

@@ -6,11 +6,17 @@ the model, sampling logits here).  Components:
 
 - :mod:`~repro.serve.cache`     — paged bf16 KV-cache pool (fixed-size
   pages, per-sequence page tables, alloc on admit / free on retire)
-- :mod:`~repro.serve.scheduler` — continuous batching with chunked prefill
+- :mod:`~repro.serve.scheduler` — continuous batching with *mixed*
+  prefill+decode chunk steps: every tick each active slot contributes
+  either its next prefill chunk or its pending decode token under a
+  per-step token budget (``max_batched_tokens``), so decode slots keep
+  emitting while other slots are mid-prefill
 - :mod:`~repro.serve.sampling`  — greedy/temperature/top-k/top-p in fp32
 - :mod:`~repro.serve.engine`    — the :class:`ServeEngine` facade
-  (``submit()`` / ``step()`` / ``drain()``)
-- :mod:`~repro.serve.metrics`   — TTFT / throughput / occupancy stats
+  (``submit()`` / ``step()`` / ``drain()``), one compiled ``(B, chunk)``
+  step shape for prefill, decode and mixed plans alike
+- :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
+  throughput / occupancy stats
 
 Quickstart::
 
@@ -29,7 +35,7 @@ from repro.serve.cache import PagedKVCache
 from repro.serve.engine import RequestResult, ServeEngine
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.sampling import SamplingParams, make_sampler, sample_logits
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, Scheduler, StepOutcome, StepPlan
 
 # the legacy monolithic-slab serving step, generalized to take
 # SamplingParams, lives with the train steps; re-export it here so
@@ -45,6 +51,8 @@ __all__ = [
     "SamplingParams",
     "Scheduler",
     "ServeEngine",
+    "StepOutcome",
+    "StepPlan",
     "make_sampler",
     "make_serve_step",
     "sample_logits",

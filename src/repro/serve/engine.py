@@ -1,11 +1,18 @@
 """The ServeEngine facade: submit() / step() / drain().
 
 Ties the subsystem together: the paged KV cache (device pools + host
-allocator), the continuous-batching scheduler (host plans), two jitted
-specializations of the unified ``serve_forward`` step (a chunk-wide
-prefill shape and a single-token decode shape — same traced function), and
-fp32 sampling.  Per-request TTFT and aggregate throughput/occupancy are
-recorded around every device call.
+allocator), the mixed-chunk continuous-batching scheduler (host plans),
+ONE jitted ``(B, chunk_size)`` specialization of the unified
+``serve_forward`` step — every tick is a mixed plan in which each active
+slot contributes either a prefill chunk or its single pending decode token,
+so there are no separate prefill/decode compiled shapes and decode slots
+never stall behind a long prompt — and fp32 sampling from each slot's last
+valid chunk position.  Per-request TTFT and inter-token latency plus
+aggregate throughput/occupancy are recorded around every device call.
+
+When ``use_kernel`` is set, pure-decode steps (the scheduler marks them
+``decode_only``, a static jit argument — same tensor shapes, second XLA
+program) route attention through the Pallas ragged-length decode kernel.
 
 Precision: params are expected pre-cast to the serving dtype (bf16); the
 KV pages are bf16; softmax inside the model and the sampling transform are
@@ -26,7 +33,7 @@ from repro.models import transformer as tfm
 from repro.serve.cache import PagedKVCache
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.sampling import SamplingParams, make_sampler
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
 
 PyTree = Any
 
@@ -44,14 +51,17 @@ class ServeEngine:
     """Mixed-precision inference engine with paged KV cache.
 
     ``submit()`` enqueues requests; ``step()`` runs one scheduler tick
-    (admit -> one batched prefill chunk or decode step -> retire finished);
+    (admit -> one mixed prefill+decode batch step -> retire finished);
     ``drain()`` steps until idle and returns results ordered by request id.
+    ``max_batched_tokens`` bounds the real tokens per step (decode tokens
+    are planned first; prefill chunks fill the remainder).
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  n_slots: int = 4, max_seq: int = 256,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  chunk_size: int = 32,
+                 max_batched_tokens: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(),
                  use_kernel: bool = False, seed: int = 0):
         if not cfg.supports_decode():
@@ -60,38 +70,56 @@ class ServeEngine:
         self.params = params
         self.cache = PagedKVCache(cfg, n_slots, max_seq,
                                   page_size=page_size, num_pages=num_pages)
-        self.scheduler = Scheduler(self.cache, chunk_size=chunk_size)
+        self.scheduler = Scheduler(self.cache, chunk_size=chunk_size,
+                                   max_batched_tokens=max_batched_tokens)
         self.sampling = sampling
         self.stats = EngineStats(n_slots)
         self._sampler = make_sampler(sampling)
+        self._use_kernel = use_kernel
         self._key = jax.random.key(seed)
         self._next_id = 0
         self._inflight: dict[int, RequestMetrics] = {}
         self._results: List[RequestResult] = []
+        self._result_ids: set[int] = set()   # finished, kept for drain()
 
         sampler = self._sampler
 
-        def raw_step(params, pages, table, tokens, start, valid, key):
+        def raw_step(params, pages, table, tokens, start, valid, key,
+                     decode_only):
+            # serve_forward returns each slot's last-valid-position logits
+            # (B, V) — the unembed already ran once per slot, not per
+            # chunk position; sampling transforms run in fp32
             logits, new_pages = tfm.serve_forward(
                 params, cfg, pages, table, tokens, start, valid,
-                page_size=page_size, use_kernel=use_kernel)
-            # each slot samples from its last valid chunk position in fp32
-            last = jnp.clip(valid - 1, 0)
-            batch = jnp.arange(tokens.shape[0])
-            sampled = sampler(logits[batch, last], key)
+                page_size=page_size, use_kernel=use_kernel,
+                decode_only=decode_only)
+            sampled = sampler(logits, key)
             return sampled, new_pages
 
-        # one traced function, two compiled shapes: (B, chunk) and (B, 1)
-        self._device_step = jax.jit(raw_step, donate_argnums=(1,))
+        # one compiled step shape: (B, chunk_size) for prefill, decode and
+        # mixed plans alike.  ``decode_only`` is static — with use_kernel
+        # it selects the Pallas decode-kernel program (same shapes).
+        self._device_step = jax.jit(raw_step, donate_argnums=(1,),
+                                    static_argnums=(7,))
 
     # -- public API ---------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int = 32,
                request_id: Optional[int] = None) -> int:
-        """Enqueue a request; returns its id."""
+        """Enqueue a request; returns its id.
+
+        An explicit ``request_id`` colliding with a queued, in-flight, or
+        already-finished request is rejected — a duplicate would corrupt
+        that request's metrics entry and collide in ``drain()``'s
+        id-sorted results (results accumulate for the engine's lifetime).
+        """
         rid = self._next_id if request_id is None else request_id
-        self._next_id = max(self._next_id, rid) + 1
+        if rid in self._inflight or rid in self._result_ids:
+            raise ValueError(
+                f"request id {rid} is already queued, in flight, or "
+                f"finished — engine request ids are single-use")
         self.scheduler.submit(Request(rid, list(prompt), max_new))
+        self._next_id = max(self._next_id, rid) + 1
         self._inflight[rid] = RequestMetrics(
             request_id=rid, prompt_len=len(prompt),
             submit_time=time.perf_counter())
@@ -103,33 +131,45 @@ class ServeEngine:
         if self.scheduler.busy_slots == 0:
             return []
         t0 = time.perf_counter()
-        kind, tokens, start, valid = self.scheduler.plan()
+        plan = self.scheduler.plan()
         if self.sampling.is_greedy:
             key = self._key
         else:
             self._key, key = jax.random.split(self._key)
+        # decode_only only specializes the compiled program when the Pallas
+        # kernel is in play — otherwise both flags trace identically and
+        # one executable serves every plan.
+        decode_only = plan.decode_only and self._use_kernel
         sampled, self.cache.pages = self._device_step(
             self.params, self.cache.pages, self.cache.table_device(),
-            jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(valid),
-            key)
+            jnp.asarray(plan.tokens), jnp.asarray(plan.start),
+            jnp.asarray(plan.valid), key, decode_only)
         sampled = np.asarray(sampled)                 # blocks on the device
         now = time.perf_counter()
 
-        first_ids, finished = self.scheduler.commit(kind, valid, sampled)
-        for rid in first_ids:
-            self._inflight[rid].first_token_time = now
-        new_tokens = len(first_ids) if kind == "prefill" else int(
-            (valid > 0).sum())
+        outcome = self.scheduler.commit(plan, sampled)
+        first = set(outcome.first_token)
+        for rid in outcome.emitted:
+            rm = self._inflight[rid]
+            if rid in first:
+                rm.first_token_time = now
+            else:
+                self.stats.record_token_gap(now - rm.last_token_time)
+            rm.last_token_time = now
         results = []
-        for _, slot in finished:
+        for _, slot in outcome.finished:
             rm = self._inflight.pop(slot.req.request_id)
+            self._result_ids.add(slot.req.request_id)
             rm.finish_time = now
             rm.new_tokens = len(slot.out)
             self.stats.record_finish(rm)
             results.append(RequestResult(slot.req.request_id,
                                          slot.req.prompt, slot.out, rm))
-        self.stats.record_step(kind, self.scheduler.busy_slots
-                               + len(finished), new_tokens, now - t0)
+        self.stats.record_step(
+            plan.kind, self.scheduler.busy_slots + len(outcome.finished),
+            len(outcome.emitted), now - t0,
+            prefill_tokens=np.where(plan.kinds == PREFILL, plan.valid, 0),
+            decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0))
         self._results.extend(results)
         return results
 

@@ -1,9 +1,14 @@
-"""Serving metrics: per-request TTFT / tok-s, aggregate throughput.
+"""Serving metrics: per-request TTFT / tok-s, aggregate throughput, ITL.
 
 Host-side plain Python — recorded around the jitted steps, never inside
 them.  ``EngineStats`` aggregates per-step records (occupancy, tokens,
-wall time) and per-request records (time-to-first-token, decode rate) into
-the summary the benchmarks and the example client print.
+wall time, per-slot prefill/decode token counts) and per-request records
+(time-to-first-token, decode rate, inter-token gaps) into the summary the
+benchmarks and the example client print.  The p50/p95 **inter-token
+latency** (gap between consecutive emitted tokens of one request) is the
+metric that makes scheduler stalls visible: under prefill-priority
+scheduling a decode slot's gap spans every step of another slot's prompt;
+under mixed-chunk scheduling it spans exactly one step.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ class RequestMetrics:
     prompt_len: int
     submit_time: float
     first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     new_tokens: int = 0
 
@@ -55,22 +61,45 @@ class EngineStats:
         self.steps = 0
         self.prefill_steps = 0
         self.decode_steps = 0
+        self.mixed_steps = 0
         self.total_new_tokens = 0
         self.total_prompt_tokens = 0
         self.elapsed = 0.0
         self._occupancy_sum = 0.0
+        # per-slot token accounting: how many prompt tokens each slot fed
+        # and how many decode tokens it stepped (batch-balance diagnostics)
+        self.slot_prefill_tokens: List[int] = [0] * n_slots
+        self.slot_decode_tokens: List[int] = [0] * n_slots
+        self.itl_gaps: List[float] = []     # inter-token gaps, all requests
         self.finished: List[RequestMetrics] = []
 
     def record_step(self, kind: str, busy_slots: int, new_tokens: int,
-                    dt: float) -> None:
+                    dt: float, prefill_tokens=None, decode_tokens=None,
+                    ) -> None:
+        """``kind`` is "prefill" / "decode" / "mixed"; the optional
+        ``prefill_tokens`` / ``decode_tokens`` are per-slot (B,) counts of
+        real tokens this step."""
         self.steps += 1
         if kind == "prefill":
             self.prefill_steps += 1
-        else:
+        elif kind == "decode":
             self.decode_steps += 1
+        else:
+            self.mixed_steps += 1
         self.total_new_tokens += new_tokens
         self.elapsed += dt
         self._occupancy_sum += busy_slots / self.n_slots
+        if prefill_tokens is not None:
+            for b, n in enumerate(prefill_tokens):
+                self.slot_prefill_tokens[b] += int(n)
+        if decode_tokens is not None:
+            for b, n in enumerate(decode_tokens):
+                self.slot_decode_tokens[b] += int(n)
+
+    def record_token_gap(self, gap: float) -> None:
+        """One inter-token gap (seconds between consecutive tokens of a
+        request, first token excluded — that interval is the TTFT)."""
+        self.itl_gaps.append(gap)
 
     def record_finish(self, rm: RequestMetrics) -> None:
         self.finished.append(rm)
@@ -91,8 +120,11 @@ class EngineStats:
             "steps": float(self.steps),
             "prefill_steps": float(self.prefill_steps),
             "decode_steps": float(self.decode_steps),
+            "mixed_steps": float(self.mixed_steps),
             "new_tokens": float(self.total_new_tokens),
             "prompt_tokens": float(self.total_prompt_tokens),
+            "prefill_tokens_fed": float(sum(self.slot_prefill_tokens)),
+            "decode_tokens_fed": float(sum(self.slot_decode_tokens)),
             "elapsed_s": self.elapsed,
             "tok_per_s": self.throughput_tok_per_s,
             "mean_occupancy": self.mean_occupancy,
@@ -100,4 +132,8 @@ class EngineStats:
         if ttfts:
             out["ttft_mean_s"] = sum(ttfts) / len(ttfts)
             out["ttft_p95_s"] = _percentile(ttfts, 0.95)
+        if self.itl_gaps:
+            out["itl_p50_s"] = _percentile(self.itl_gaps, 0.50)
+            out["itl_p95_s"] = _percentile(self.itl_gaps, 0.95)
+            out["itl_mean_s"] = sum(self.itl_gaps) / len(self.itl_gaps)
         return out

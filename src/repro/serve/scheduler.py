@@ -1,29 +1,38 @@
-"""Continuous batching with chunked prefill.
+"""Continuous batching with mixed prefill+decode chunk steps.
 
 Host-side slot bookkeeping: a FIFO of waiting requests, ``n_slots``
-decode slots, and per-step batch plans for the engine's jitted steps.
+decode slots, and per-step batch plans for the engine's jitted step.
 Admission is FCFS with full-budget page reservation (see
 :mod:`repro.serve.cache`); a finished request retires immediately and its
 slot/pages are re-admitted the same step — the batch never drains to
 refill, which is the whole point of continuous batching.
 
-Prefill is *chunked*: a prompt runs through the model ``chunk_size``
-tokens at a time via the batched ``serve_forward`` entry point (one matmul
-over the chunk), not token-by-token through the decode step.  Scheduling
-is prefill-priority: while any slot has unfed prompt tokens the step is a
-prefill chunk over those slots; otherwise it is a single-token decode over
-the generating slots.  Slots not participating in a step carry
+Every step is one *mixed* ``(B, chunk_size)`` plan: each active slot
+contributes either its next prefill chunk (a prompt runs through the model
+``chunk_size`` tokens at a time via the batched ``serve_forward`` entry
+point — one matmul over the chunk, not token-by-token decode) or its single
+pending decode token.  Decode slots therefore keep emitting tokens while
+other slots are mid-prefill — there is no prefill-priority phase in which
+in-flight generations stall behind a long prompt (Orca-style iteration-level
+scheduling).  A per-step token budget (``max_batched_tokens``, vLLM-style)
+bounds the total real tokens in a step: decode tokens are planned first
+(each costs one token and is latency-critical), then prefill chunks are
+truncated to the remaining budget, so prefill work cannot unboundedly
+inflate inter-token latency.  Slots not contributing to a step carry
 ``valid = 0`` and are masked inside the model.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.serve.cache import PagedKVCache
+
+#: per-slot step kinds in :class:`StepPlan.kinds`
+IDLE, PREFILL, DECODE = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -57,22 +66,77 @@ class _Slot:
         return len(self.out) >= self.req.max_new
 
 
-class Scheduler:
-    """Admission, chunk planning, and completion bookkeeping."""
+@dataclasses.dataclass
+class StepPlan:
+    """One mixed prefill+decode step over all slots.
 
-    def __init__(self, cache: PagedKVCache, chunk_size: int = 32):
+    ``tokens`` is always ``(n_slots, chunk_size)`` — one compiled step
+    shape.  ``kinds[b]`` says what slot ``b`` contributes (IDLE / PREFILL /
+    DECODE); ``valid[b]`` is its real-token count (prefill: chunk length,
+    decode: 1, idle: 0).  ``decode_only`` is True when no slot prefills
+    this step — a static hint the engine uses to route attention through
+    the single-query Pallas decode kernel.
+    """
+    tokens: np.ndarray      # (B, C) int32
+    start: np.ndarray       # (B,)   int32 absolute position of tokens[:, 0]
+    valid: np.ndarray       # (B,)   int32 real tokens per slot
+    kinds: np.ndarray       # (B,)   int8  IDLE | PREFILL | DECODE
+    decode_only: bool
+
+    @property
+    def kind(self) -> str:
+        """"prefill" / "decode" / "mixed" — for stats bucketing."""
+        has_prefill = bool((self.kinds == PREFILL).any())
+        has_decode = bool((self.kinds == DECODE).any())
+        if has_prefill and has_decode:
+            return "mixed"
+        return "prefill" if has_prefill else "decode"
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.valid.sum())
+
+
+@dataclasses.dataclass
+class StepOutcome:
+    """Host-side result of committing one step's sampled tokens."""
+    emitted: List[int]                  # request ids that gained a token
+    first_token: List[int]              # subset: ids whose first token
+    finished: List[Tuple[int, _Slot]]   # (slot_id, slot), already retired
+
+
+class Scheduler:
+    """Admission, mixed-chunk planning, and completion bookkeeping."""
+
+    def __init__(self, cache: PagedKVCache, chunk_size: int = 32,
+                 max_batched_tokens: Optional[int] = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
         self.cache = cache
         self.n_slots = cache.n_slots
         self.chunk_size = chunk_size
+        if max_batched_tokens is None:
+            # never throttles: every slot can contribute a full chunk
+            max_batched_tokens = self.n_slots * chunk_size
+        if max_batched_tokens < self.n_slots:
+            # the budget must cover one decode token per slot, or a full
+            # decode batch could never be planned in one step
+            raise ValueError(
+                f"max_batched_tokens {max_batched_tokens} must be >= "
+                f"n_slots {self.n_slots}")
+        self.max_batched_tokens = max_batched_tokens
         self.max_seq = cache.max_pages_per_slot * cache.page_size
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * self.n_slots
+        self._active_ids: Set[int] = set()   # queued or in-flight
 
     # -- admission / eviction -----------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if req.request_id in self._active_ids:
+            raise ValueError(
+                f"request id {req.request_id} is already queued or in "
+                f"flight — ids must be unique among active requests")
         total = len(req.prompt) + req.max_new
         if total > self.max_seq:
             raise ValueError(
@@ -85,6 +149,7 @@ class Scheduler:
                 f"{self.cache.pages_for(total)} pages, pool has only "
                 f"{self.cache.num_pages}")
         self.waiting.append(req)
+        self._active_ids.add(req.request_id)
 
     def admit(self) -> List[int]:
         """Place waiting requests into free slots, FCFS.
@@ -110,6 +175,7 @@ class Scheduler:
         slot = self.slots[slot_id]
         self.cache.retire(slot_id)
         self.slots[slot_id] = None
+        self._active_ids.discard(slot.req.request_id)
         return slot
 
     # -- planning -----------------------------------------------------------
@@ -122,61 +188,71 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting) or self.busy_slots > 0
 
-    def plan(self) -> Tuple[str, np.ndarray, np.ndarray, np.ndarray]:
-        """-> (kind, tokens (B, C), start (B,), valid (B,)) for one step.
+    def plan(self) -> StepPlan:
+        """One mixed ``(B, chunk_size)`` step plan under the token budget.
 
-        kind "prefill": C = chunk_size, each prefilling slot feeds its next
-        prompt chunk.  kind "decode": C = 1, each generating slot feeds its
-        last sampled token.  valid = 0 masks a slot out of the step.
+        Decode slots are planned first (1 token each — the budget always
+        covers a full decode batch, see ``__init__``); prefilling slots
+        then take ``min(chunk_size, remaining prompt, remaining budget)``
+        tokens each, FCFS by slot id.  A prefilling slot that gets no
+        budget sits the step out (``valid = 0``) and retries next step.
         """
-        prefill = any(s is not None and s.prefilling for s in self.slots)
-        c = self.chunk_size if prefill else 1
+        c = self.chunk_size
         tokens = np.zeros((self.n_slots, c), np.int32)
         start = np.zeros(self.n_slots, np.int32)
         valid = np.zeros(self.n_slots, np.int32)
+        kinds = np.zeros(self.n_slots, np.int8)
+        budget = self.max_batched_tokens
         for slot_id, slot in enumerate(self.slots):
-            if slot is None:
+            if slot is None or slot.prefilling:
                 continue
-            if prefill:
-                if not slot.prefilling:
-                    continue
-                chunk = slot.req.prompt[slot.fed:slot.fed + c]
-                tokens[slot_id, :len(chunk)] = chunk
-                start[slot_id] = slot.fed
-                valid[slot_id] = len(chunk)
-            else:
-                tokens[slot_id, 0] = slot.next_token
-                start[slot_id] = slot.length
-                valid[slot_id] = 1
-        return ("prefill" if prefill else "decode"), tokens, start, valid
+            tokens[slot_id, 0] = slot.next_token
+            start[slot_id] = slot.length
+            valid[slot_id] = 1
+            kinds[slot_id] = DECODE
+            budget -= 1
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None or not slot.prefilling or budget <= 0:
+                continue
+            take = min(c, len(slot.req.prompt) - slot.fed, budget)
+            tokens[slot_id, :take] = slot.req.prompt[slot.fed:slot.fed + take]
+            start[slot_id] = slot.fed
+            valid[slot_id] = take
+            kinds[slot_id] = PREFILL
+            budget -= take
+        return StepPlan(tokens, start, valid, kinds,
+                        decode_only=not bool((kinds == PREFILL).any()))
 
     # -- completion ---------------------------------------------------------
 
-    def commit(self, kind: str, valid: np.ndarray, sampled: Sequence[int],
-               ) -> Tuple[List[int], List[Tuple[int, _Slot]]]:
+    def commit(self, plan: StepPlan, sampled: Sequence[int]) -> StepOutcome:
         """Apply one step's sampled tokens to the slot state.
 
-        Returns (request ids that produced their first token this step,
-        finished (slot_id, slot) pairs — already retired).
+        Prefill-vs-decode is derived per slot from the slot's own state
+        (a slot with unfed prompt tokens was fed prompt this step), not
+        from a global step kind — a single commit handles mixed steps.
         """
+        emitted: List[int] = []
         first_token: List[int] = []
         finished: List[Tuple[int, _Slot]] = []
         for slot_id, slot in enumerate(self.slots):
-            if slot is None or valid[slot_id] == 0:
+            if slot is None or plan.valid[slot_id] == 0:
                 continue
-            if kind == "prefill":
-                slot.fed += int(valid[slot_id])
+            if slot.prefilling:
+                slot.fed += int(plan.valid[slot_id])
                 slot.length = slot.fed
                 if not slot.prefilling:    # prompt fully cached: the last
                     tok = int(sampled[slot_id])  # position's logits sampled
                     slot.out.append(tok)
                     slot.next_token = tok
                     first_token.append(slot.req.request_id)
+                    emitted.append(slot.req.request_id)
             else:
                 tok = int(sampled[slot_id])
                 slot.out.append(tok)
                 slot.next_token = tok
                 slot.length += 1
+                emitted.append(slot.req.request_id)
             if slot.done:
                 finished.append((slot_id, self._retire(slot_id)))
-        return first_token, finished
+        return StepOutcome(emitted, first_token, finished)

@@ -41,6 +41,12 @@ def _accum_grads(loss_fn, scaling, policy: Policy, params, batch, k: int,
     per-microbatch reduce-scatter of cotangents overlaps the next
     microbatch's compute under the XLA latency-hiding scheduler.
     """
+    for leaf in jax.tree.leaves(batch):
+        if getattr(leaf, "ndim", 0) and leaf.shape[0] % k:
+            raise ValueError(
+                f"grad_accum={k} does not divide the batch size "
+                f"{leaf.shape[0]} (batch leaf shape {leaf.shape}); use a "
+                f"global batch size that is a multiple of run.grad_accum")
     mb = jax.tree.map(
         lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
     diff, static = mpx.partition(params, mpx.is_inexact_array)

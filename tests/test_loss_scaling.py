@@ -68,6 +68,33 @@ def test_scaling_is_pytree_and_jittable():
     assert rebuilt.period == 2
 
 
+def test_noop_scaling_is_lazy():
+    """``NoOpLossScaling.loss_scaling`` must not be a device array baked at
+    import time (that would allocate on the default device before user code
+    can pick one) — it is a property computed on access."""
+    assert isinstance(vars(mpx.NoOpLossScaling)["loss_scaling"], property)
+    ls = mpx.NoOpLossScaling()
+    assert isinstance(ls.loss_scaling, jax.Array)
+    assert float(ls.loss_scaling) == 1.0
+
+
+def test_noop_scaling_import_allocates_nothing():
+    """Importing the loss-scaling module creates zero live device arrays."""
+    import os
+    import subprocess
+    import sys
+    code = ("import jax\n"
+            "import repro.core.loss_scaling\n"
+            "leaked = jax.live_arrays()\n"
+            "assert not leaked, leaked\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+
+
 def test_noop_scaling():
     ls = mpx.NoOpLossScaling()
     g = {"a": jnp.full((3,), 5.0, jnp.bfloat16)}

@@ -42,6 +42,22 @@ def test_preemption_checkpoints(tmp_path):
     assert t.ckpt.latest_step() == 1                 # stopped + saved
 
 
+def test_grad_accum_must_divide_batch():
+    """grad_accum that doesn't divide the batch fails with an actionable
+    message naming both values, not an opaque reshape error."""
+    cfg = registry.get_smoke_config("llama3-8b")
+    from repro.train import state as S
+    from repro.train.steps import make_train_step
+    from repro.configs import shapes
+    batch = shapes.make_batch(cfg, 8, 16)
+    run = RunConfig(grad_accum=3)
+    opt = make_optimizer(run)
+    st = S.init_state(jax.random.key(0), cfg, run, opt)
+    step = jax.jit(make_train_step(cfg, run, opt))
+    with pytest.raises(ValueError, match=r"grad_accum=3.*batch size 8"):
+        step(st, batch)
+
+
 def test_grad_accum_equivalence():
     """accum=2 with the same global batch gives a loss within tolerance of
     accum=1 (mean-of-microbatch losses == full-batch loss for CE)."""
