@@ -7,9 +7,12 @@ Prints ``name,us_per_call,derived`` CSV, per the repo contract:
 - ``loss_scaling_*``        — §3.3: dynamic-scaling overhead + fused kernel
 - ``attention_*``           — blocked-vs-plain attention (memory roofline)
 - ``serving_*``             — repro.serve engine: tok/s + TTFT + inter-token
-  p50/p95 vs slot count
+  p50/p95 vs slot count, paged-kernel vs gather-path rows on an identical
+  workload, and estimated HBM bytes per decode token for both paths
 
 Run: ``PYTHONPATH=src python -m benchmarks.run``
+(``python -m benchmarks.serving_bench --json out.json`` runs just the
+serving trajectory and archives it — the CI artifact.)
 """
 from __future__ import annotations
 

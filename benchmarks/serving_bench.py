@@ -1,4 +1,4 @@
-"""Serving-engine benchmark: tok/s, TTFT and inter-token latency.
+"""Serving-engine benchmark: tok/s, TTFT, ITL, and paged-kernel vs gather.
 
 Drives the full ``repro.serve`` stack (paged KV cache, mixed prefill+decode
 chunk steps, continuous batching, greedy fp32 sampling) over a fixed ragged
@@ -6,10 +6,21 @@ request queue on a small dense model.  Wall time on CPU is indicative only;
 the shape of the trajectory — throughput scaling with slot count while TTFT
 holds, and inter-token p50/p95 staying near one step time instead of
 ballooning whenever another slot prefills — is the serving-side analogue of
-the paper's batch-size sweeps.  The ITL rows are the measurable form of the
-unified-batch scheduler fix: under the old prefill-priority alternation a
-decode slot's inter-token gap spanned a whole prompt's worth of chunk
-steps.
+the paper's batch-size sweeps.
+
+The ``*_gather`` vs ``*_paged`` rows compare the two attention paths over
+the identical workload: the gather path materializes every slot's padded
+KV prefix as a dense contiguous copy each step, the paged path streams
+only the allocated pages through the page-table-walking Pallas kernel
+(``repro.kernels.paged_attention``).  Off-TPU the kernel runs in interpret
+mode, so its *wall-clock* rows are not meaningful there — the
+``serving_hbm_bytes_decode_*`` rows carry the comparison: estimated HBM
+bytes touched per decode token, the quantity the decode hot path is
+actually bound by.
+
+Standalone run (used by CI to archive the trajectory)::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --json out.json
 """
 from __future__ import annotations
 
@@ -19,20 +30,65 @@ SLOT_COUNTS = (2, 4, 8)
 REQUESTS = 16
 MAX_NEW = 16
 
+# kernel-vs-gather comparison cell (kept small: off-TPU the kernel runs
+# in interpret mode)
+CMP_SLOTS = 4
+CMP_REQUESTS = 8
+CMP_MAX_NEW = 8
+CMP_MAX_SEQ = 64
+CMP_PAGE = 16
 
-def run() -> list[tuple[str, float, str]]:
-    import jax
 
-    from repro import mpx, serve
+def _bench_cfg():
     from repro.configs.base import ModelConfig
-    from repro.models import transformer as T
-
-    cfg = ModelConfig(
+    return ModelConfig(
         name="serve-bench", family="dense",
         n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, head_dim=16,
         d_ff=512, vocab_size=2048, pattern=("attn",), mlp="swiglu",
         tie_embeddings=True, remat="none",
     )
+
+
+def _hbm_bytes_per_decode_token(cfg, slots: int, max_seq: int,
+                                mean_len: float, page_size: int,
+                                itemsize: int = 2) -> tuple[float, float]:
+    """(gather, paged) estimated HBM bytes per decode token.
+
+    One pure-decode step emits ``slots`` tokens.  Per layer the gather
+    path touches the full padded view three times (pool read -> dense
+    write -> attention read) for K and V; the paged kernel streams each
+    slot's *allocated pages* once — page-granular, so a ``mean_len``-token
+    prefix costs ``ceil(mean_len / page_size) * page_size`` positions, not
+    ``mean_len``.  Q/O and weight traffic are identical between the paths
+    and excluded.
+    """
+    kv_bytes = cfg.n_kv_heads * cfg.resolved_head_dim * itemsize * 2  # K+V
+    page_tokens = -(-mean_len // page_size) * page_size
+    gather = cfg.n_layers * 3 * slots * max_seq * kv_bytes / slots
+    paged = cfg.n_layers * slots * page_tokens * kv_bytes / slots
+    return gather, paged
+
+
+def _drive(engine, prompts, max_new):
+    import repro.serve as serve
+    # warm the single compiled (B, chunk) step so the sweep measures
+    # steady state (prefill, decode and mixed plans share one shape)
+    engine.submit(prompts[0], max_new=2)
+    engine.drain()
+    engine.stats = serve.EngineStats(engine.cache.n_slots)
+    for p in prompts:
+        engine.submit(p, max_new=max_new)
+    engine.drain()
+    return engine.stats.summary()
+
+
+def run() -> list[tuple[str, float, str]]:
+    import jax
+
+    from repro import mpx, serve
+    from repro.models import transformer as T
+
+    cfg = _bench_cfg()
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab_size,
@@ -43,15 +99,7 @@ def run() -> list[tuple[str, float, str]]:
     for slots in SLOT_COUNTS:
         engine = serve.ServeEngine(cfg, params, n_slots=slots, max_seq=64,
                                    page_size=16, chunk_size=16)
-        # warm the single compiled (B, chunk) step so the sweep measures
-        # steady state (prefill, decode and mixed plans share one shape)
-        engine.submit(prompts[0], max_new=2)
-        engine.drain()
-        engine.stats = serve.EngineStats(slots)
-        for p in prompts:
-            engine.submit(p, max_new=MAX_NEW)
-        engine.drain()
-        s = engine.stats.summary()
+        s = _drive(engine, prompts, MAX_NEW)
         us_per_tok = 1e6 / max(s["tok_per_s"], 1e-9)
         rows.append((
             f"serving_tok_{slots}slots", us_per_tok,
@@ -63,4 +111,53 @@ def run() -> list[tuple[str, float, str]]:
             f"serving_itl_p95_{slots}slots", s["itl_p95_s"] * 1e6,
             f"p50={s['itl_p50_s']*1e3:.2f}ms "
             f"mixed={int(s['mixed_steps'])}/{int(s['steps'])} steps"))
+
+    # -- paged kernel vs gather path, identical workload --------------------
+    cmp_prompts = prompts[:CMP_REQUESTS]
+    on_tpu = jax.default_backend() == "tpu"
+    for label, use_kernel in (("gather", False), ("paged", True)):
+        engine = serve.ServeEngine(
+            cfg, params, n_slots=CMP_SLOTS, max_seq=CMP_MAX_SEQ,
+            page_size=CMP_PAGE, chunk_size=16, use_kernel=use_kernel)
+        s = _drive(engine, cmp_prompts, CMP_MAX_NEW)
+        us_per_tok = 1e6 / max(s["tok_per_s"], 1e-9)
+        note = "" if (on_tpu or not use_kernel) else " (interpret mode)"
+        rows.append((
+            f"serving_tok_{CMP_SLOTS}slots_{label}", us_per_tok,
+            f"tok_s={s['tok_per_s']:.0f}{note}"))
+        rows.append((
+            f"serving_itl_p95_{CMP_SLOTS}slots_{label}",
+            s["itl_p95_s"] * 1e6,
+            f"p50={s['itl_p50_s']*1e3:.2f}ms{note}"))
+
+    mean_len = float(np.mean([len(p) for p in cmp_prompts])) + CMP_MAX_NEW / 2
+    gb, pb = _hbm_bytes_per_decode_token(cfg, CMP_SLOTS, CMP_MAX_SEQ,
+                                         mean_len, CMP_PAGE)
+    rows.append(("serving_hbm_bytes_decode_gather", gb,
+                 f"3x padded dense copy/layer maxseq={CMP_MAX_SEQ}"))
+    rows.append(("serving_hbm_bytes_decode_paged", pb,
+                 f"allocated pages only mean_len={mean_len:.0f} "
+                 f"page={CMP_PAGE} ({gb / pb:.1f}x less than gather)"))
     return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", type=str, default=None,
+                    help="also dump rows as JSON to this path (CI artifact)")
+    args = ap.parse_args()
+    rows = run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "value": v, "derived": d}
+                       for n, v, d in rows], f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

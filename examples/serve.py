@@ -29,6 +29,14 @@ Usage sketch (what this script does)::
 Stochastic sampling: pass ``serve.SamplingParams(temperature=0.8,
 top_k=40, top_p=0.95)`` — all transforms run in fp32.
 
+``--use-kernel`` routes EVERY step — prefill chunks, decode tokens and
+mixed batches alike — through the native paged-attention Pallas kernel
+(``repro.kernels.paged_attention``): the per-slot page tables are walked
+inside the kernel, so the per-step gathered contiguous KV copy never
+exists and only allocated pages are streamed.  On TPU this is the hot
+path; off-TPU it runs in (slow) interpret mode, so the flag is off by
+default here.
+
 Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4
 """
 import argparse
@@ -63,6 +71,10 @@ def main():
     ap.add_argument("--max-batched-tokens", type=int, default=None,
                     help="per-step token budget (decode first, prefill "
                          "fills the remainder; default: slots*chunk)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run all steps through the paged-attention "
+                         "Pallas kernel (TPU hot path; interpret mode "
+                         "elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -75,6 +87,7 @@ def main():
         cfg, params, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, chunk_size=args.chunk,
         max_batched_tokens=args.max_batched_tokens,
+        use_kernel=args.use_kernel,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p))
 

@@ -1,7 +1,10 @@
-"""Decode attention Pallas kernel: one query token vs a long KV cache.
+"""Decode attention Pallas kernel: one query token vs a *contiguous* cache.
 
-The serving hot path (decode_32k / long_500k cells): q (B, H, D) against
-K/V (B, S, K, D).  Unlike prefill flash attention the arithmetic intensity
+q (B, H, D) against a monolithic K/V slab (B, S, K, D) — the decode_32k /
+long_500k cells and any caller holding per-slot contiguous caches.  (The
+serving engine's paged pools are served by the page-table-walking kernel
+in ``repro.kernels.paged_attention`` instead — this one would need the
+gathered dense copy.)  Unlike prefill flash attention the arithmetic intensity
 is O(1) FLOPs/byte — the kernel is purely HBM-bandwidth-bound streaming the
 cache — so the design goal is: touch every cache byte exactly once, in
 bf16, with fp32 softmax state in scratch, masked by the *current length*
@@ -59,8 +62,14 @@ def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
         l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        # zero V rows at/beyond length: the final (ragged) block reads
+        # past the array edge, and OOB/undefined values must not reach
+        # the accumulator even via p == 0 (0 * NaN = NaN)
+        row = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (v_ref.shape[0], 1), 0)
+        vb = jnp.where(row < length, v_ref[...], 0)
         pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            p.astype(vb.dtype), vb, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)           # (G, D)
         acc_scr[...] = acc_scr[...] * alpha + pv
         m_scr[...] = m_new
@@ -86,9 +95,14 @@ def decode_attention(q, k, v, length, *, block_k: int = 512,
     s, kv = k.shape[1], k.shape[2]
     g = h // kv
     scale = 1.0 / math.sqrt(d)
-    # largest power-of-two block that divides S (gcd since block_k is a
-    # power of two) — arbitrary page-pool lengths must not crash
-    block_k = math.gcd(min(block_k, s), s)
+    # arbitrary cache lengths must not crash OR degrade the block size:
+    # a cdiv grid keeps block_k intact and lets the final ragged block
+    # read past the array edge (Pallas pads OOB; the in-kernel masks keep
+    # those values out of the softmax AND the accumulator).  The old
+    # gcd-divisor fallback collapsed to size-1 blocks for lengths like
+    # 3*512+1; padding K/V with jnp.pad instead would rewrite the whole
+    # multi-GB cache every step on the exact path this kernel exists for.
+    block_k = min(block_k, s)
 
     qf = q.reshape(b, kv, g, d).transpose(0, 1, 2, 3).reshape(b * kv, g, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
@@ -96,7 +110,7 @@ def decode_attention(q, k, v, length, *, block_k: int = 512,
     length_arr = jnp.broadcast_to(
         jnp.asarray(length, jnp.int32).reshape(-1), (b,))
 
-    grid = (b * kv, s // block_k)
+    grid = (b * kv, -(-s // block_k))
     out = pl.pallas_call(
         functools.partial(_decode_kernel, block_k=block_k, scale=scale,
                           n_kv=kv),

@@ -1,0 +1,166 @@
+"""Native paged-attention Pallas kernel: page-table-indexed KV streaming.
+
+The serving hot path is HBM-bandwidth-bound, and the paged KV layout
+(``repro.serve.cache``) stores every slot's cache as fixed-size pages of a
+shared ``(P, page_size, K, D)`` pool addressed through a per-slot page
+table.  The gather-based path first materializes each slot's *entire
+padded* prefix — ``(B, Pmax*page_size, K, D)`` — as a dense copy, per
+layer, per tick, garbage sentinel pages included.  This kernel instead
+walks each slot's page table directly: the page table and per-slot chunk
+``start``/``valid`` counts are scalar-prefetch (SMEM) operands, and the
+K/V block index maps resolve logical page ``i`` -> physical page
+``table[b, i]`` in the pool, so the DMA engine streams exactly the pages
+the scheduler allocated, in bf16, exactly once.  Pages past a slot's
+length re-issue the previous block index (the pipeline elides the
+refetch) and their compute is predicated off — unallocated pages are
+never read.
+
+Queries cover every ``serve_forward`` step shape, not just single-token
+decode: q is ``(B, C, H, D)`` where ``C = 1`` is decode and ``C > 1`` a
+chunked-prefill (or mixed) step, causal by absolute position
+(``start[b] + ci``).  GQA keeps the whole query group resident: the
+kernel block is ``(C*G, D)`` with ``G = H / K``, one grid row per
+(slot, kv-head).  Softmax runs as the usual streaming (m, l, acc)
+recurrence in fp32 VMEM scratch; padding chunk positions
+(``ci >= valid[b]``) and idle slots (``valid = 0``) output exact zeros.
+
+Grid: ``(B*K, Pmax)`` — logical pages innermost so the fp32 state is
+carried across one slot's pages, then reset (`i == 0`) for the next row.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, page_size: int,
+                  scale: float, n_kv: int, group: int):
+    i = pl.program_id(1)
+    n_i = pl.num_programs(1)
+    b = pl.program_id(0) // n_kv
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start = start_ref[b]
+    length = start + valid_ref[b]        # cached tokens incl. this chunk
+    page_lo = i * page_size
+
+    @pl.when(page_lo < length)
+    def _body():
+        q = q_ref[...]                                    # (C*G, D) bf16
+        k = k_ref[...]                                    # (ps, D)  bf16
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (C*G, ps) fp32
+        # key absolute position, query chunk index: causal by position,
+        # padding queries (ci >= valid) fully masked -> exact-zero rows
+        kpos = page_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        ok = (kpos <= start + ci) & (ci < valid_ref[b])
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # masked entries contribute exactly 0 (not exp(NEG_INF - NEG_INF)
+        # = 1 on all-masked padding rows), so l stays 0 there and the
+        # final divide yields zeros instead of garbage-page averages
+        p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (C*G, D)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(i == n_i - 1)
+    def _fin():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
+                    interpret: bool = False):
+    """Paged attention over a shared KV page pool, no gathered copy.
+
+    q (B, C, H, D) — one serving chunk per slot (C = 1 decode, C > 1
+    prefill / mixed); k_pages / v_pages (P, page_size, K, D) — the shared
+    pools, chunk K/V already scattered in (``paged_write`` runs first);
+    page_table (B, Pmax) int32 logical->physical map whose unallocated
+    entries hold the sentinel ``P``; start (B,) absolute position of each
+    slot's chunk; valid (B,) real tokens in the chunk (0 = idle slot).
+
+    Query ``ci`` of slot ``b`` attends causally to cache positions
+    ``<= start[b] + ci``; padding positions (``ci >= valid[b]``) and idle
+    slots output zeros.  Returns (B, C, H, D) in q.dtype.  K divides H;
+    sliding windows and logit softcaps are the caller's fallback path.
+    """
+    b, c, h, d = q.shape
+    n_pages, page_size, kv, _ = k_pages.shape
+    if h % kv:
+        raise ValueError(f"n_kv_heads {kv} must divide n_heads {h}")
+    group = h // kv
+    cg = c * group
+    scale = 1.0 / math.sqrt(d)
+    pmax = page_table.shape[1]
+
+    # (B, C, H, D) -> one (C*G, D) query block per (slot, kv-head) row
+    qf = (q.reshape(b, c, kv, group, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b * kv, cg, d))
+    table = jnp.asarray(page_table, jnp.int32)
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1), (b,))
+
+    def page_index(bk, i, table_ref, start_ref, valid_ref):
+        # logical page i of slot b -> physical pool page.  Steps past the
+        # slot's last used page re-issue the previous index (no refetch,
+        # compute predicated off); the sentinel (= n_pages) only survives
+        # for idle slots, clamped into range with compute predicated off.
+        bb = bk // kv
+        n_pg = pl.cdiv(start_ref[bb] + valid_ref[bb], page_size)
+        i_eff = jnp.minimum(i, jnp.maximum(n_pg - 1, 0))
+        phys = jnp.minimum(table_ref[bb, i_eff], n_pages - 1)
+        return (phys, 0, bk % kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * kv, pmax),
+        in_specs=[
+            pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0)),
+            pl.BlockSpec((None, page_size, None, d), page_index),
+            pl.BlockSpec((None, page_size, None, d), page_index),
+        ],
+        out_specs=pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=page_size, scale=scale,
+                          n_kv=kv, group=group),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kv, cg, d), q.dtype),
+        interpret=interpret,
+    )(table, start, valid, qf, k_pages, v_pages)
+    return (out.reshape(b, kv, c, group, d).transpose(0, 2, 1, 3, 4)
+            .reshape(b, c, h, d))
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, start, valid):
+    """Ragged pure-jnp paged oracle: see :func:`repro.kernels.ref`."""
+    from repro.kernels import ref
+    return ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                   start, valid)

@@ -59,6 +59,48 @@ def decode_attention_ref(q, k, v, lengths) -> jnp.ndarray:
     return jnp.einsum("bhs,bshd->bhd", probs, ve)
 
 
+def paged_attention_ref(q, k_pages, v_pages, page_table, start, valid
+                        ) -> jnp.ndarray:
+    """Ragged paged-attention oracle (gathers the pool; the kernel doesn't).
+
+    q (B, C, H, D) — one serving chunk per slot; k_pages / v_pages
+    (P, page_size, K, D) shared pools; page_table (B, Pmax) int32 with the
+    sentinel ``P`` in unallocated entries; start / valid (B,) chunk
+    position and real-token count.  Query ``ci`` attends causally to
+    cache positions ``<= start + ci``; padding positions (``ci >= valid``)
+    and idle slots (``valid = 0``) return exact zeros — matching
+    ``repro.kernels.paged_attention``.  fp32 scores/softmax, compute-dtype
+    matmuls.  This is deliberately the dense gather-based layout: the
+    ground truth the page-table-walking kernel is tested against.
+    """
+    b, c, h, d = q.shape
+    n_pages, ps, kv, _ = k_pages.shape
+    pmax = page_table.shape[1]
+    s_max = pmax * ps
+    tbl = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, n_pages - 1)
+    k = k_pages[tbl].reshape(b, s_max, kv, d)
+    v = v_pages[tbl].reshape(b, s_max, kv, d)
+    ke = jnp.repeat(k, h // kv, axis=2)
+    ve = jnp.repeat(v, h // kv, axis=2)
+    start = jnp.asarray(start, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    kpos = jnp.arange(s_max)
+    # zero V beyond each slot's length so fully-masked rows (uniform
+    # softmax over NEG_INF scores) cannot pick up garbage-page values
+    length = (start + valid)[:, None, None, None]
+    ve = jnp.where(kpos[None, :, None, None] < length, ve, 0)
+    scores = jnp.einsum("bchd,bshd->bhcs", q, ke).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    qpos = start[:, None] + jnp.arange(c)[None, :]
+    ok = (kpos[None, None, :] <= qpos[:, :, None]) & \
+         (jnp.arange(c)[None, :, None] < valid[:, None, None])
+    scores = jnp.where(ok[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhcs,bshd->bchd", probs, ve)
+    row_ok = jnp.arange(c)[None, :] < valid[:, None]
+    return jnp.where(row_ok[:, :, None, None], out, 0).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jnp.ndarray:
     """(..., D) RMSNorm with fp32 statistics, output in x.dtype."""
     x32 = x.astype(jnp.float32)

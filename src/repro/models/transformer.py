@@ -361,14 +361,14 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
                  page_table, x: jnp.ndarray, positions, valid, *,
-                 page_size: int, use_kernel: bool, decode_only: bool):
+                 page_size: int, use_kernel: bool):
     h = apply_norm(cfg.norm, p["pre_norm"], x)
     y, pages = attention.paged_attend(
         p["attn"], pages, page_table, h, positions, valid,
         page_size=page_size, n_heads=cfg.n_heads,
         window=cfg.window if kind == "local_attn" else 0,
         cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        use_kernel=use_kernel, decode_only=decode_only)
+        use_kernel=use_kernel)
     if cfg.post_norm:
         y = apply_norm(cfg.norm, p["post_mix_norm"], y)
     x = x + y
@@ -390,7 +390,6 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                   page_table: jnp.ndarray, tokens: jnp.ndarray,
                   start: jnp.ndarray, valid: jnp.ndarray, *,
                   page_size: int, use_kernel: bool = False,
-                  decode_only: bool = False,
                   ) -> tuple[jnp.ndarray, PyTree]:
     """Unified serving step over a paged KV cache.
 
@@ -401,10 +400,11 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
     plans :mod:`repro.serve.scheduler` emits.  Returns (logits (B, V) for
     each slot's LAST VALID chunk position — the only position serving ever
     samples, so the vocab projection runs once per slot instead of once
-    per chunk position — and the new pages).  ``decode_only`` is a static
-    promise that every slot has valid <= 1, letting ``use_kernel`` route
-    pure-decode steps through the Pallas decode kernel without a separate
-    (B, 1) compiled shape.
+    per chunk position — and the new pages).  ``use_kernel=True`` runs
+    every full-attention layer through the Pallas paged-attention kernel
+    (:mod:`repro.kernels.paged_attention`) — prefill, decode and mixed
+    plans alike, one compiled program, no gathered dense copy of the
+    cache.
     """
     _require_paged_support(cfg)
     dtype = params["embed"][next(iter(params["embed"]))].dtype
@@ -421,8 +421,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                 x, new_gpages[f"b{i}"] = _block_serve(
                     cfg, kind, gparams[f"b{i}"], gpages[f"b{i}"],
                     page_table, x, positions, valid,
-                    page_size=page_size, use_kernel=use_kernel,
-                    decode_only=decode_only)
+                    page_size=page_size, use_kernel=use_kernel)
             return x, new_gpages
 
         x, new_pages["scan"] = jax.lax.scan(
@@ -431,8 +430,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
         x, new_pages[f"tail{j}"] = _block_serve(
             cfg, kind, params[f"tail{j}"], pages[f"tail{j}"],
             page_table, x, positions, valid,
-            page_size=page_size, use_kernel=use_kernel,
-            decode_only=decode_only)
+            page_size=page_size, use_kernel=use_kernel)
 
     # only each slot's last valid position is ever sampled: gather it
     # before the unembed so the (d, V) projection runs per slot, not per

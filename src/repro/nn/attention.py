@@ -299,7 +299,18 @@ def decode_step(params, cache, x, pos, *, n_heads: int, window: int,
 # page, so HBM is committed per admitted request, not per slot capacity.
 # Token position p of slot b lives at pages[table[b, p // page_size],
 # p % page_size].  Unallocated table entries hold the sentinel ``n_pages``
-# (writes there are dropped; reads are clamped and masked by length).
+# (writes there are dropped).
+#
+# Attention reads the pool two ways.  The native path
+# (``use_kernel=True``) is the Pallas paged-attention kernel
+# (``repro.kernels.paged_attention``): its block index maps walk each
+# slot's page table directly, so only allocated pages are streamed and no
+# contiguous copy of the cache ever exists.  The fallback
+# (``paged_gather`` + masked softmax) materializes each slot's padded
+# prefix as a dense (B, Pmax*page_size, K, D) view — sentinel entries
+# read clamped garbage that is masked by position.  The fallback is the
+# numerics oracle and the non-TPU / windowed / softcapped path, not the
+# serving layout.
 
 def paged_cache_spec(n_pages: int, page_size: int, n_kv_heads: int,
                      head_dim: int, dtype) -> dict:
@@ -332,8 +343,11 @@ def paged_write(pages: jnp.ndarray, vals: jnp.ndarray,
 def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     """(P, ps, K, D), (B, Pmax) -> contiguous view (B, Pmax*ps, K, D).
 
-    The gather-based reference layout for attention: sentinel entries read
-    clamped garbage that the caller masks by length.
+    The gather-based *fallback* layout for attention: a dense padded copy
+    of every slot's prefix, sentinel entries reading clamped garbage that
+    the caller masks by length.  The serving hot path never calls this —
+    ``paged_attend(use_kernel=True)`` streams pages through the page
+    table inside the Pallas kernel instead.
     """
     g = pages[page_table]
     b, pmax, ps = g.shape[:3]
@@ -343,8 +357,7 @@ def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
 def paged_attend(params, pages: dict, page_table: jnp.ndarray,
                  x: jnp.ndarray, positions: jnp.ndarray, valid: jnp.ndarray,
                  *, page_size: int, n_heads: int, window: int, cap: float,
-                 rope_theta: float, use_kernel: bool = False,
-                 decode_only: bool = False):
+                 rope_theta: float, use_kernel: bool = False):
     """Chunked-prefill / decode attention against a paged KV cache.
 
     x (B, C, d) with per-token absolute ``positions`` (B, C) and ``valid``
@@ -352,18 +365,18 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
     attends every query to its slot's full cached prefix, causal by
     absolute position.  C=1 with valid=1 is exactly single-token decode;
     C>1 is a prefill chunk (or a mixed-chunk serving step in which decode
-    slots carry valid=1).  Returns (y (B, C, d), new ``pages`` dict).
+    slots carry valid=1 and idle slots valid=0).  Returns
+    (y (B, C, d), new ``pages`` dict).
 
-    ``use_kernel`` routes single-query full-attention steps through the
-    Pallas ragged-length decode kernel (TPU hot path); the default
-    pure-jnp path is numerically identical and runs everywhere.  The
-    kernel fires when C == 1, or when the caller statically promises
-    ``decode_only`` (every slot has valid <= 1 — the mixed-chunk
-    scheduler's pure-decode plans, which keep the one (B, C) compiled
-    shape): only chunk position 0 is live, so the kernel runs on q[:, 0]
-    and the padding positions output zeros.  Ragged-valid guard: slots
-    with valid == 0 get kernel length 0 (zeros out) instead of attending
-    one garbage position through a sentinel page-table entry.
+    ``use_kernel=True`` runs the Pallas paged-attention kernel
+    (:mod:`repro.kernels.paged_attention`) for full-attention layers: the
+    page table is a scalar-prefetch operand and the kernel's block index
+    maps stream each slot's allocated pages directly from the shared
+    pool — the gathered contiguous (B, Pmax*page_size, K, D) copy is
+    never formed, for decode AND prefill chunks alike.  Sliding-window
+    (``window > 0``) and softcapped (``cap > 0``) layers, and
+    ``use_kernel=False``, take the pure-jnp gather fallback — the
+    numerics oracle, which runs everywhere.
     """
     dtype = x.dtype
     q, k_new, v_new = _project_qkv(params, x, positions, rope_theta)
@@ -373,19 +386,14 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
         "v": paged_write(pages["v"], v_new.astype(dtype), page_table,
                          positions, valid, page_size=page_size),
     }
-    k = paged_gather(new_pages["k"], page_table)             # (B, S, K, D)
-    v = paged_gather(new_pages["v"], page_table)
-    c = x.shape[1]
-    if (use_kernel and (c == 1 or decode_only)
-            and window == 0 and cap <= 0):
-        from repro.kernels.decode_attention import decode_attention
-        lengths = jnp.where(valid > 0, positions[:, 0] + 1, 0)
-        out = decode_attention(q[:, 0], k, v, lengths,
-                               interpret=jax.default_backend() != "tpu")
-        out = out[:, None]                                   # (B, 1, H, D)
-        if c > 1:   # decode_only: padding positions contribute zeros
-            out = jnp.pad(out, ((0, 0), (0, c - 1), (0, 0), (0, 0)))
+    if use_kernel and window == 0 and cap <= 0:
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(q, new_pages["k"], new_pages["v"], page_table,
+                              positions[:, 0], valid,
+                              interpret=jax.default_backend() != "tpu")
     else:
+        k = paged_gather(new_pages["k"], page_table)         # (B, S, K, D)
+        v = paged_gather(new_pages["v"], page_table)
         kx = _expand_kv(k, n_heads)
         vx = _expand_kv(v, n_heads)
         scale = 1.0 / math.sqrt(q.shape[-1])

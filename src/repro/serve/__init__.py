@@ -14,7 +14,11 @@ the model, sampling logits here).  Components:
 - :mod:`~repro.serve.sampling`  — greedy/temperature/top-k/top-p in fp32
 - :mod:`~repro.serve.engine`    — the :class:`ServeEngine` facade
   (``submit()`` / ``step()`` / ``drain()``), one compiled ``(B, chunk)``
-  step shape for prefill, decode and mixed plans alike
+  step shape for prefill, decode and mixed plans alike; with
+  ``use_kernel=True`` every step (not just pure decode) runs attention
+  through the native paged-attention Pallas kernel, which walks the page
+  tables in-kernel instead of materializing a gathered contiguous copy
+  of each slot's KV prefix
 - :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
   throughput / occupancy stats
 

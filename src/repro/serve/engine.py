@@ -10,9 +10,12 @@ never stall behind a long prompt — and fp32 sampling from each slot's last
 valid chunk position.  Per-request TTFT and inter-token latency plus
 aggregate throughput/occupancy are recorded around every device call.
 
-When ``use_kernel`` is set, pure-decode steps (the scheduler marks them
-``decode_only``, a static jit argument — same tensor shapes, second XLA
-program) route attention through the Pallas ragged-length decode kernel.
+When ``use_kernel`` is set, EVERY step — prefill, decode and mixed alike —
+routes attention through the Pallas paged-attention kernel
+(``repro.kernels.paged_attention``): the page table is a scalar-prefetch
+operand and the kernel streams each slot's allocated pages straight from
+the shared pools, so the per-step gathered dense copy of the cache never
+exists and there is still exactly one compiled step program.
 
 Precision: params are expected pre-cast to the serving dtype (bf16); the
 KV pages are bf16; softmax inside the model and the sampling transform are
@@ -75,7 +78,6 @@ class ServeEngine:
         self.sampling = sampling
         self.stats = EngineStats(n_slots)
         self._sampler = make_sampler(sampling)
-        self._use_kernel = use_kernel
         self._key = jax.random.key(seed)
         self._next_id = 0
         self._inflight: dict[int, RequestMetrics] = {}
@@ -84,23 +86,20 @@ class ServeEngine:
 
         sampler = self._sampler
 
-        def raw_step(params, pages, table, tokens, start, valid, key,
-                     decode_only):
+        def raw_step(params, pages, table, tokens, start, valid, key):
             # serve_forward returns each slot's last-valid-position logits
             # (B, V) — the unembed already ran once per slot, not per
             # chunk position; sampling transforms run in fp32
             logits, new_pages = tfm.serve_forward(
                 params, cfg, pages, table, tokens, start, valid,
-                page_size=page_size, use_kernel=use_kernel,
-                decode_only=decode_only)
+                page_size=page_size, use_kernel=use_kernel)
             sampled = sampler(logits, key)
             return sampled, new_pages
 
-        # one compiled step shape: (B, chunk_size) for prefill, decode and
-        # mixed plans alike.  ``decode_only`` is static — with use_kernel
-        # it selects the Pallas decode-kernel program (same shapes).
-        self._device_step = jax.jit(raw_step, donate_argnums=(1,),
-                                    static_argnums=(7,))
+        # one compiled step shape AND program: (B, chunk_size) for
+        # prefill, decode and mixed plans alike — the paged kernel covers
+        # every plan, so there is no decode-only specialization.
+        self._device_step = jax.jit(raw_step, donate_argnums=(1,))
 
     # -- public API ---------------------------------------------------------
 
@@ -136,14 +135,10 @@ class ServeEngine:
             key = self._key
         else:
             self._key, key = jax.random.split(self._key)
-        # decode_only only specializes the compiled program when the Pallas
-        # kernel is in play — otherwise both flags trace identically and
-        # one executable serves every plan.
-        decode_only = plan.decode_only and self._use_kernel
         sampled, self.cache.pages = self._device_step(
             self.params, self.cache.pages, self.cache.table_device(),
             jnp.asarray(plan.tokens), jnp.asarray(plan.start),
-            jnp.asarray(plan.valid), key, decode_only)
+            jnp.asarray(plan.valid), key)
         sampled = np.asarray(sampled)                 # blocks on the device
         now = time.perf_counter()
 

@@ -74,8 +74,8 @@ class StepPlan:
     shape.  ``kinds[b]`` says what slot ``b`` contributes (IDLE / PREFILL /
     DECODE); ``valid[b]`` is its real-token count (prefill: chunk length,
     decode: 1, idle: 0).  ``decode_only`` is True when no slot prefills
-    this step — a static hint the engine uses to route attention through
-    the single-query Pallas decode kernel.
+    this step — informational (stats / tracing) since the paged-attention
+    kernel covers prefill, decode and mixed plans with one program.
     """
     tokens: np.ndarray      # (B, C) int32
     start: np.ndarray       # (B,)   int32 absolute position of tokens[:, 0]

@@ -27,6 +27,28 @@ def test_decode_attention_vs_ref(b, h, kv, d, s, dtype):
                                    atol=tol, rtol=tol)
 
 
+def test_decode_attention_non_multiple_length_keeps_block():
+    """S = 3*512+1 must pad to the next block multiple, not collapse to
+    size-1 K-blocks (the old gcd fallback ran 1537 grid steps per row)."""
+    b, h, kv, d, s = 2, 4, 2, 32, 3 * 512 + 1
+    q = jax.random.normal(jax.random.key(0), (b, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (b, s, kv, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (b, s, kv, d), jnp.bfloat16)
+    lengths = jnp.array([s, 700], jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_k=512, interpret=True)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+    # tiny caches shorter than the block still work (block shrinks to S)
+    got1 = decode_attention(q, k[:, :5], v[:, :5], jnp.int32(5),
+                            block_k=512, interpret=True)
+    want1 = decode_attention_ref(q, k[:, :5], v[:, :5], 5)
+    np.testing.assert_allclose(np.asarray(got1, np.float32),
+                               np.asarray(want1, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
 def test_decode_attention_length_is_dynamic():
     """One compiled kernel serves every position (length in SMEM)."""
     b, h, kv, d, s = 1, 4, 2, 64, 512

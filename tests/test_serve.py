@@ -250,6 +250,68 @@ def test_decode_kernel_zero_length_slot_outputs_zeros():
 
 
 # --------------------------------------------------------------------------
+# engine on the native paged-attention kernel (interpret mode off-TPU)
+# --------------------------------------------------------------------------
+
+def test_engine_use_kernel_end_to_end(params):
+    """use_kernel=True drives EVERY step (prefill chunks, decode, mixed)
+    through the paged-attention kernel: requests complete, pages drain,
+    and runs are deterministic.  (Token-for-token identity with the
+    gather path is NOT asserted — the streaming-softmax summation order
+    differs in bf16 low bits, which can flip a greedy near-tie.)"""
+    prompts = ragged_prompts(5, seed=2, lo=3, hi=12)
+
+    def run():
+        eng = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                                page_size=8, chunk_size=8, use_kernel=True)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        results = eng.drain()
+        eng.cache.check_invariants()
+        assert eng.cache.used_pages == 0
+        assert all(len(r.tokens) == 4 for r in results)
+        assert eng.stats.summary()["prefill_tokens_fed"] \
+            == sum(len(p) for p in prompts)
+        return [r.tokens for r in results]
+
+    assert run() == run()
+
+
+def test_serve_forward_kernel_matches_gather_logits(params):
+    """Kernel vs gather logits agree to bf16 tolerance on a genuinely
+    mixed step: one slot decoding mid-stream, one mid-prefill, one idle."""
+    page_size, pmax, b = 8, 6, 3
+    pages = T.init_paged_cache(CFG, n_pages=b * pmax, page_size=page_size)
+    table = np.full((b, pmax), b * pmax, np.int32)
+    table[0, :3] = [3, 7, 1]
+    table[1, :4] = [2, 5, 9, 11]
+    rng = np.random.default_rng(4)
+
+    # populate slot 0 with an 11-token prefix via two prefill chunks
+    for lo, n in ((0, 8), (8, 3)):
+        toks = np.zeros((b, 8), np.int32)
+        toks[0, :n] = rng.integers(1, CFG.vocab_size, n)
+        _, pages = T.serve_forward(
+            params, CFG, pages, jnp.asarray(table), jnp.asarray(toks),
+            jnp.asarray([lo, 0, 0], jnp.int32),
+            jnp.asarray([n, 0, 0], jnp.int32), page_size=page_size)
+
+    toks = np.zeros((b, 8), np.int32)
+    toks[0, 0] = 42                                      # decode @ pos 11
+    toks[1, :6] = rng.integers(1, CFG.vocab_size, 6)     # prefill chunk
+    args = (jnp.asarray(table), jnp.asarray(toks),
+            jnp.asarray([11, 0, 0], jnp.int32),
+            jnp.asarray([1, 6, 0], jnp.int32))
+    lg, _ = T.serve_forward(params, CFG, pages, *args, page_size=page_size,
+                            use_kernel=False)
+    lk, _ = T.serve_forward(params, CFG, pages, *args, page_size=page_size,
+                            use_kernel=True)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(lk, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+# --------------------------------------------------------------------------
 # sampling (fp32 policy)
 # --------------------------------------------------------------------------
 
