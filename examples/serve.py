@@ -11,6 +11,26 @@ waiting requests are admitted the same step, and decoding sequences keep
 emitting tokens while another slot prefills — bound per-step prefill work
 with ``--max-batched-tokens``), and fp32 sampling from bf16 logits.
 
+``--spec-tokens K`` turns every decode into a speculative
+propose/verify/commit loop:
+
+1. **propose** — the default n-gram prompt-lookup proposer drafts up to K
+   tokens per decoding slot on the host (continue the most recent earlier
+   occurrence of the context's suffix n-gram — free lunch on repetitive
+   text, zero device cost);
+2. **verify** — the slot's window (committed token + drafts) rides the
+   SAME batched ``(B, chunk)`` step a single decode token would have
+   used; ``serve_forward`` returns per-position logits for the window;
+3. **commit** — fp32 rejection sampling accepts the longest matching
+   prefix plus one corrected/bonus token, and the paged cache truncates
+   back over the rejected tail (dead positions, no page churn).
+
+With ``--temperature 0`` the accept rule is argmax equality, so greedy
+speculative output is token-identical to non-speculative output — only
+``steps`` and ``tokens_per_step`` in the summary change.  Acceptance rate
+and tokens-per-step print with the summary; per-request rates are on
+``result.metrics.acceptance_rate``.
+
 Usage sketch (what this script does)::
 
     from repro import mpx, serve
@@ -19,25 +39,30 @@ Usage sketch (what this script does)::
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
     engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128,
                                page_size=16, chunk_size=32,
-                               sampling=serve.SamplingParams())  # greedy
+                               spec_tokens=3)   # 0 disables speculation
     for prompt in prompts:
         engine.submit(prompt, max_new=32)
     for result in engine.drain():          # continuous batching inside
         print(result.request_id, result.tokens, result.metrics.ttft)
-    print(engine.stats.summary())          # tok/s, TTFT, occupancy
+    print(engine.stats.summary())          # tok/s, TTFT, accept rate
 
 Stochastic sampling: pass ``serve.SamplingParams(temperature=0.8,
-top_k=40, top_p=0.95)`` — all transforms run in fp32.
+top_k=40, top_p=0.95)`` — all transforms (and speculative verification)
+run in fp32, and rejection sampling preserves the target distribution
+exactly regardless of what the proposer guesses.
 
-``--use-kernel`` routes EVERY step — prefill chunks, decode tokens and
+``--use-kernel`` routes EVERY step — prefill chunks, decode windows and
 mixed batches alike — through the native paged-attention Pallas kernel
 (``repro.kernels.paged_attention``): the per-slot page tables are walked
 inside the kernel, so the per-step gathered contiguous KV copy never
-exists and only allocated pages are streamed.  On TPU this is the hot
-path; off-TPU it runs in (slow) interpret mode, so the flag is off by
-default here.
+exists and only allocated pages are streamed.  ``--pages-per-block``
+widens the kernel's K-blocks to span that many logical pages per grid
+step (page_size 16 alone underfills the 128-lane MXU contraction dim).
+On TPU this is the hot path; off-TPU it runs in (slow) interpret mode, so
+the flag is off by default here.
 
-Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4
+Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4 \
+         --spec-tokens 3
 """
 import argparse
 
@@ -69,12 +94,19 @@ def main():
     ap.add_argument("--chunk", type=int, default=32,
                     help="prefill chunk size (tokens per prefill step)")
     ap.add_argument("--max-batched-tokens", type=int, default=None,
-                    help="per-step token budget (decode first, prefill "
-                         "fills the remainder; default: slots*chunk)")
+                    help="per-step token budget (decode first, then "
+                         "prefill, then drafts; default: slots*chunk)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative window: up to K n-gram-proposed "
+                         "draft tokens verified per decode step "
+                         "(0 disables)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run all steps through the paged-attention "
                          "Pallas kernel (TPU hot path; interpret mode "
                          "elsewhere)")
+    ap.add_argument("--pages-per-block", type=int, default=1,
+                    help="logical pages per kernel K-block (fill the MXU "
+                         "lane dim; only meaningful with --use-kernel)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -87,7 +119,8 @@ def main():
         cfg, params, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, chunk_size=args.chunk,
         max_batched_tokens=args.max_batched_tokens,
-        use_kernel=args.use_kernel,
+        spec_tokens=args.spec_tokens,
+        use_kernel=args.use_kernel, pages_per_block=args.pages_per_block,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p))
 
@@ -99,9 +132,11 @@ def main():
 
     for res in engine.drain():
         ttft = res.metrics.ttft
+        rate = res.metrics.acceptance_rate
+        spec = f" accept {rate:.0%}" if rate is not None else ""
         print(f"req {res.request_id:2d}: prompt[{len(res.prompt)}] -> "
               f"{len(res.tokens)} tokens: {res.tokens[:8]}... "
-              f"(ttft {ttft * 1e3:.0f}ms)")
+              f"(ttft {ttft * 1e3:.0f}ms{spec})")
 
     s = engine.stats.summary()
     print(f"\n{int(s['requests'])} requests, {int(s['new_tokens'])} tokens "
@@ -114,6 +149,11 @@ def main():
     if "itl_p50_s" in s:
         print(f"inter-token latency: p50 {s['itl_p50_s']*1e3:.1f}ms, "
               f"p95 {s['itl_p95_s']*1e3:.1f}ms")
+    if s["spec_proposed"]:
+        print(f"speculation: {int(s['spec_accepted'])}/"
+              f"{int(s['spec_proposed'])} drafts accepted "
+              f"({100 * s['spec_accept_rate']:.0f}%), "
+              f"{s['tokens_per_step']:.2f} tokens/step")
 
 
 if __name__ == "__main__":

@@ -17,15 +17,23 @@ never read.
 
 Queries cover every ``serve_forward`` step shape, not just single-token
 decode: q is ``(B, C, H, D)`` where ``C = 1`` is decode and ``C > 1`` a
-chunked-prefill (or mixed) step, causal by absolute position
-(``start[b] + ci``).  GQA keeps the whole query group resident: the
-kernel block is ``(C*G, D)`` with ``G = H / K``, one grid row per
+chunked-prefill, speculative-window, or mixed step, causal by absolute
+position (``start[b] + ci``).  GQA keeps the whole query group resident:
+the kernel block is ``(C*G, D)`` with ``G = H / K``, one grid row per
 (slot, kv-head).  Softmax runs as the usual streaming (m, l, acc)
 recurrence in fp32 VMEM scratch; padding chunk positions
 (``ci >= valid[b]``) and idle slots (``valid = 0``) output exact zeros.
 
-Grid: ``(B*K, Pmax)`` — logical pages innermost so the fp32 state is
-carried across one slot's pages, then reset (`i == 0`) for the next row.
+``pages_per_block`` widens the K-block: each grid step concatenates that
+many *logical* pages (each resolved to its own physical page by its own
+index map — pages are not physically contiguous, so one block per page is
+DMA'd and they meet in VMEM) into a single ``(ppb * page_size, D)``
+operand for the score matmul.  With page_size 16 a single page underfills
+the MXU's 128-lane contraction dim; ``pages_per_block = 8`` fills it.
+
+Grid: ``(B*K, ceil(Pmax / pages_per_block))`` — logical page blocks
+innermost so the fp32 state is carried across one slot's pages, then
+reset (``i == 0``) for the next row.
 """
 from __future__ import annotations
 
@@ -40,9 +48,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, k_ref, v_ref,
-                  o_ref, m_scr, l_scr, acc_scr, *, page_size: int,
-                  scale: float, n_kv: int, group: int):
+def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, *refs,
+                  page_size: int, scale: float, n_kv: int, group: int,
+                  ppb: int):
+    k_refs = refs[:ppb]
+    v_refs = refs[ppb:2 * ppb]
+    o_ref = refs[2 * ppb]
+    m_scr, l_scr, acc_scr = refs[2 * ppb + 1:]
     i = pl.program_id(1)
     n_i = pl.num_programs(1)
     b = pl.program_id(0) // n_kv
@@ -55,18 +67,27 @@ def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, k_ref, v_ref,
 
     start = start_ref[b]
     length = start + valid_ref[b]        # cached tokens incl. this chunk
-    page_lo = i * page_size
+    block_lo = i * ppb * page_size
 
-    @pl.when(page_lo < length)
+    @pl.when(block_lo < length)
     def _body():
         q = q_ref[...]                                    # (C*G, D) bf16
-        k = k_ref[...]                                    # (ps, D)  bf16
+        if ppb == 1:
+            k = k_refs[0][...]
+            v = v_refs[0][...]
+        else:
+            # ppb logical pages, each DMA'd from its own physical page,
+            # concatenated in VMEM into one (ppb*ps, D) matmul operand
+            k = jnp.concatenate([r[...] for r in k_refs], axis=0)
+            v = jnp.concatenate([r[...] for r in v_refs], axis=0)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (C*G, ps) fp32
+            preferred_element_type=jnp.float32) * scale  # (C*G, ppb*ps) f32
         # key absolute position, query chunk index: causal by position,
-        # padding queries (ci >= valid) fully masked -> exact-zero rows
-        kpos = page_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # padding queries (ci >= valid) fully masked -> exact-zero rows.
+        # Sub-pages past the slot's length (their index map re-issued an
+        # allocated page) land at kpos >= length > start + ci: masked.
+        kpos = block_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
         ok = (kpos <= start + ci) & (ci < valid_ref[b])
         s = jnp.where(ok, s, NEG_INF)
@@ -79,7 +100,7 @@ def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, k_ref, v_ref,
         p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
         l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
         pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)           # (C*G, D)
         acc_scr[...] = acc_scr[...] * alpha + pv
         m_scr[...] = m_new
@@ -91,29 +112,36 @@ def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, k_ref, v_ref,
 
 
 def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
-                    interpret: bool = False):
+                    pages_per_block: int = 1, interpret: bool = False):
     """Paged attention over a shared KV page pool, no gathered copy.
 
     q (B, C, H, D) — one serving chunk per slot (C = 1 decode, C > 1
-    prefill / mixed); k_pages / v_pages (P, page_size, K, D) — the shared
-    pools, chunk K/V already scattered in (``paged_write`` runs first);
-    page_table (B, Pmax) int32 logical->physical map whose unallocated
-    entries hold the sentinel ``P``; start (B,) absolute position of each
-    slot's chunk; valid (B,) real tokens in the chunk (0 = idle slot).
+    prefill / speculative window / mixed); k_pages / v_pages
+    (P, page_size, K, D) — the shared pools, chunk K/V already scattered
+    in (``paged_write`` runs first); page_table (B, Pmax) int32
+    logical->physical map whose unallocated entries hold the sentinel
+    ``P``; start (B,) absolute position of each slot's chunk; valid (B,)
+    real tokens in the chunk (0 = idle slot).
 
     Query ``ci`` of slot ``b`` attends causally to cache positions
     ``<= start[b] + ci``; padding positions (``ci >= valid[b]``) and idle
-    slots output zeros.  Returns (B, C, H, D) in q.dtype.  K divides H;
-    sliding windows and logit softcaps are the caller's fallback path.
+    slots output zeros.  ``pages_per_block`` logical pages are fused into
+    each K-block (score-matmul contraction dim ``pages_per_block *
+    page_size`` — fill it to ~128 lanes on the MXU).  Returns
+    (B, C, H, D) in q.dtype.  K divides H; sliding windows and logit
+    softcaps are the caller's fallback path.
     """
     b, c, h, d = q.shape
     n_pages, page_size, kv, _ = k_pages.shape
     if h % kv:
         raise ValueError(f"n_kv_heads {kv} must divide n_heads {h}")
+    if pages_per_block < 1:
+        raise ValueError(f"pages_per_block must be >= 1: {pages_per_block}")
     group = h // kv
     cg = c * group
     scale = 1.0 / math.sqrt(d)
     pmax = page_table.shape[1]
+    ppb = min(pages_per_block, pmax)
 
     # (B, C, H, D) -> one (C*G, D) query block per (slot, kv-head) row
     qf = (q.reshape(b, c, kv, group, d).transpose(0, 2, 1, 3, 4)
@@ -122,25 +150,28 @@ def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
     valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1), (b,))
 
-    def page_index(bk, i, table_ref, start_ref, valid_ref):
-        # logical page i of slot b -> physical pool page.  Steps past the
-        # slot's last used page re-issue the previous index (no refetch,
-        # compute predicated off); the sentinel (= n_pages) only survives
-        # for idle slots, clamped into range with compute predicated off.
-        bb = bk // kv
-        n_pg = pl.cdiv(start_ref[bb] + valid_ref[bb], page_size)
-        i_eff = jnp.minimum(i, jnp.maximum(n_pg - 1, 0))
-        phys = jnp.minimum(table_ref[bb, i_eff], n_pages - 1)
-        return (phys, 0, bk % kv, 0)
+    def page_index(j):
+        # logical page i*ppb + j of slot b -> physical pool page.  Blocks
+        # past the slot's last used page re-issue the last used index (no
+        # refetch, compute predicated off); the sentinel (= n_pages) only
+        # survives for idle slots, clamped into range with compute
+        # predicated off.
+        def index_map(bk, i, table_ref, start_ref, valid_ref):
+            bb = bk // kv
+            n_pg = pl.cdiv(start_ref[bb] + valid_ref[bb], page_size)
+            i_eff = jnp.minimum(i * ppb + j, jnp.maximum(n_pg - 1, 0))
+            phys = jnp.minimum(table_ref[bb, i_eff], n_pages - 1)
+            return (phys, 0, bk % kv, 0)
+        return index_map
 
+    kv_specs = [pl.BlockSpec((None, page_size, None, d), page_index(j))
+                for j in range(ppb)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(b * kv, pmax),
-        in_specs=[
-            pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0)),
-            pl.BlockSpec((None, page_size, None, d), page_index),
-            pl.BlockSpec((None, page_size, None, d), page_index),
-        ],
+        grid=(b * kv, -(-pmax // ppb)),
+        in_specs=(
+            [pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0))]
+            + kv_specs + kv_specs),
         out_specs=pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((cg, 1), jnp.float32),
@@ -150,11 +181,11 @@ def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page_size=page_size, scale=scale,
-                          n_kv=kv, group=group),
+                          n_kv=kv, group=group, ppb=ppb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kv, cg, d), q.dtype),
         interpret=interpret,
-    )(table, start, valid, qf, k_pages, v_pages)
+    )(table, start, valid, qf, *([k_pages] * ppb), *([v_pages] * ppb))
     return (out.reshape(b, kv, c, group, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, c, h, d))
 

@@ -18,8 +18,9 @@ Public API (all pure functions; ``params`` is a nested dict pytree):
 - ``decode(params, cfg, cache, tokens, pos)`` -> (logits, new_cache)
 - ``init_paged_cache(cfg, n_pages, page_size)`` -> paged K/V pool tree
 - ``serve_forward(params, cfg, pages, table, tokens, start, valid)``
-  -> (last-valid-position logits (B, V), new_pages)
-  [mixed chunked-prefill / ragged decode steps, repro.serve]
+  -> (per-window-position logits (B, W, V), new_pages)
+  [mixed chunked-prefill / ragged decode / speculative-verify steps,
+  repro.serve — ``logit_idx`` names the W chunk positions to unembed]
 
 Precision: the *caller* (``mpx.filter_value_and_grad``) casts params and
 batch to the compute dtype; this module only pins the known-fragile spots to
@@ -361,14 +362,14 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
                  page_table, x: jnp.ndarray, positions, valid, *,
-                 page_size: int, use_kernel: bool):
+                 page_size: int, use_kernel: bool, pages_per_block: int = 1):
     h = apply_norm(cfg.norm, p["pre_norm"], x)
     y, pages = attention.paged_attend(
         p["attn"], pages, page_table, h, positions, valid,
         page_size=page_size, n_heads=cfg.n_heads,
         window=cfg.window if kind == "local_attn" else 0,
         cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, pages_per_block=pages_per_block)
     if cfg.post_norm:
         y = apply_norm(cfg.norm, p["post_mix_norm"], y)
     x = x + y
@@ -389,22 +390,33 @@ def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
 def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                   page_table: jnp.ndarray, tokens: jnp.ndarray,
                   start: jnp.ndarray, valid: jnp.ndarray, *,
-                  page_size: int, use_kernel: bool = False,
+                  page_size: int, logit_idx: Optional[jnp.ndarray] = None,
+                  use_kernel: bool = False, pages_per_block: int = 1,
                   ) -> tuple[jnp.ndarray, PyTree]:
     """Unified serving step over a paged KV cache.
 
     tokens (B, C) with per-slot chunk ``start`` positions (B,) and ``valid``
     (B,) real-token counts (0 disables a slot).  Each slot is independent:
-    one (B, C) step can mix prefill chunks (valid up to C) and single
-    decode tokens (valid = 1, start = current length) — the mixed-chunk
-    plans :mod:`repro.serve.scheduler` emits.  Returns (logits (B, V) for
-    each slot's LAST VALID chunk position — the only position serving ever
-    samples, so the vocab projection runs once per slot instead of once
-    per chunk position — and the new pages).  ``use_kernel=True`` runs
-    every full-attention layer through the Pallas paged-attention kernel
-    (:mod:`repro.kernels.paged_attention`) — prefill, decode and mixed
-    plans alike, one compiled program, no gathered dense copy of the
-    cache.
+    one (B, C) step can mix prefill chunks (valid up to C), single decode
+    tokens (valid = 1, start = current length) and speculative decode
+    windows (valid = 1 + k: the committed token plus k proposed drafts) —
+    the mixed-chunk plans :mod:`repro.serve.scheduler` emits.
+
+    Returns (logits (B, W, V), new pages): per-slot logits for the W chunk
+    positions named by ``logit_idx`` (B, W) int32 — the slot's live window
+    for speculative verification, or (the default when ``logit_idx`` is
+    None) just each slot's last valid position with W = 1.  Gathering the
+    window *before* the unembed keeps the (d, V) projection at W columns
+    per slot instead of once per padded chunk position — the C-fold
+    vocab-matmul saving survives speculation because W (typically <= 5) is
+    far below C.
+
+    ``use_kernel=True`` runs every full-attention layer through the Pallas
+    paged-attention kernel (:mod:`repro.kernels.paged_attention`) —
+    prefill, decode, mixed and speculative-window plans alike, one
+    compiled program, no gathered dense copy of the cache;
+    ``pages_per_block`` widens the kernel's K-blocks to span that many
+    logical pages per grid step.
     """
     _require_paged_support(cfg)
     dtype = params["embed"][next(iter(params["embed"]))].dtype
@@ -421,7 +433,8 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                 x, new_gpages[f"b{i}"] = _block_serve(
                     cfg, kind, gparams[f"b{i}"], gpages[f"b{i}"],
                     page_table, x, positions, valid,
-                    page_size=page_size, use_kernel=use_kernel)
+                    page_size=page_size, use_kernel=use_kernel,
+                    pages_per_block=pages_per_block)
             return x, new_gpages
 
         x, new_pages["scan"] = jax.lax.scan(
@@ -430,17 +443,19 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
         x, new_pages[f"tail{j}"] = _block_serve(
             cfg, kind, params[f"tail{j}"], pages[f"tail{j}"],
             page_table, x, positions, valid,
-            page_size=page_size, use_kernel=use_kernel)
+            page_size=page_size, use_kernel=use_kernel,
+            pages_per_block=pages_per_block)
 
-    # only each slot's last valid position is ever sampled: gather it
-    # before the unembed so the (d, V) projection runs per slot, not per
-    # padded chunk position (C-fold less vocab-matmul work per step)
-    last = jnp.clip(valid - 1, 0)
-    x = x[jnp.arange(x.shape[0]), last][:, None]             # (B, 1, d)
+    # gather the sampled window positions before the unembed so the (d, V)
+    # projection runs over W positions per slot, not per padded chunk
+    # position (C-fold less vocab-matmul work per step)
+    if logit_idx is None:
+        logit_idx = jnp.clip(valid - 1, 0)[:, None]          # (B, 1)
+    x = x[jnp.arange(x.shape[0])[:, None], logit_idx]        # (B, W, d)
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = embedding.logits_fn(params["embed"], params.get("unembed", {}),
                                  cfg, x)
-    return logits[:, 0], new_pages
+    return logits, new_pages
 
 
 def decode(params: PyTree, cfg: ModelConfig, cache: PyTree,

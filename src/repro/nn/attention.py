@@ -357,15 +357,18 @@ def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
 def paged_attend(params, pages: dict, page_table: jnp.ndarray,
                  x: jnp.ndarray, positions: jnp.ndarray, valid: jnp.ndarray,
                  *, page_size: int, n_heads: int, window: int, cap: float,
-                 rope_theta: float, use_kernel: bool = False):
+                 rope_theta: float, use_kernel: bool = False,
+                 pages_per_block: int = 1):
     """Chunked-prefill / decode attention against a paged KV cache.
 
     x (B, C, d) with per-token absolute ``positions`` (B, C) and ``valid``
     (B,) real-token counts.  Writes the chunk's K/V into the pages, then
     attends every query to its slot's full cached prefix, causal by
     absolute position.  C=1 with valid=1 is exactly single-token decode;
-    C>1 is a prefill chunk (or a mixed-chunk serving step in which decode
-    slots carry valid=1 and idle slots valid=0).  Returns
+    C>1 is a prefill chunk, a speculative decode window (valid = 1 + k
+    proposed tokens, verified causally in one pass — the same C>1 program
+    as prefill), or a mixed-chunk serving step in which decode slots
+    carry small valid and idle slots valid=0.  Returns
     (y (B, C, d), new ``pages`` dict).
 
     ``use_kernel=True`` runs the Pallas paged-attention kernel
@@ -373,9 +376,11 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
     page table is a scalar-prefetch operand and the kernel's block index
     maps stream each slot's allocated pages directly from the shared
     pool — the gathered contiguous (B, Pmax*page_size, K, D) copy is
-    never formed, for decode AND prefill chunks alike.  Sliding-window
-    (``window > 0``) and softcapped (``cap > 0``) layers, and
-    ``use_kernel=False``, take the pure-jnp gather fallback — the
+    never formed, for decode AND prefill chunks alike.
+    ``pages_per_block`` widens each kernel K-block to span that many
+    logical pages (page_size 16 alone underfills the 128-lane MXU dim).
+    Sliding-window (``window > 0``) and softcapped (``cap > 0``) layers,
+    and ``use_kernel=False``, take the pure-jnp gather fallback — the
     numerics oracle, which runs everywhere.
     """
     dtype = x.dtype
@@ -390,6 +395,7 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
         from repro.kernels.paged_attention import paged_attention
         out = paged_attention(q, new_pages["k"], new_pages["v"], page_table,
                               positions[:, 0], valid,
+                              pages_per_block=pages_per_block,
                               interpret=jax.default_backend() != "tpu")
     else:
         k = paged_gather(new_pages["k"], page_table)         # (B, S, K, D)

@@ -1,26 +1,52 @@
-"""repro.serve — mixed-precision inference engine.
+"""repro.serve — mixed-precision inference engine with speculative decode.
 
 The serving half of the MPX discipline as a subsystem: bf16 weights and KV
 cache on the hot path, fp32 only where precision matters (softmax inside
-the model, sampling logits here).  Components:
+the model, sampling and speculative verification here).  Components:
 
 - :mod:`~repro.serve.cache`     — paged bf16 KV-cache pool (fixed-size
-  pages, per-sequence page tables, alloc on admit / free on retire)
+  pages, per-sequence page tables, alloc on admit / free on retire, and
+  committed/written length watermarks so speculative windows can write
+  KV ahead and ``truncate()`` back to the accepted prefix with the
+  invariants still checkable)
 - :mod:`~repro.serve.scheduler` — continuous batching with *mixed*
   prefill+decode chunk steps: every tick each active slot contributes
-  either its next prefill chunk or its pending decode token under a
-  per-step token budget (``max_batched_tokens``), so decode slots keep
-  emitting while other slots are mid-prefill
-- :mod:`~repro.serve.sampling`  — greedy/temperature/top-k/top-p in fp32
+  either its next prefill chunk or its decode window under a per-step
+  token budget (``max_batched_tokens``), so decode slots keep emitting
+  while other slots are mid-prefill
+- :mod:`~repro.serve.propose`   — host-side draft proposers for
+  speculative decoding; :class:`NGramProposer` (prompt-lookup) is the
+  default, a draft-model proposer is a named follow-on
+- :mod:`~repro.serve.sampling`  — greedy/temperature/top-k/top-p in fp32,
+  samplers returning (ids, probabilities), and Leviathan-style
+  :func:`rejection_sample` for window verification
 - :mod:`~repro.serve.engine`    — the :class:`ServeEngine` facade
   (``submit()`` / ``step()`` / ``drain()``), one compiled ``(B, chunk)``
-  step shape for prefill, decode and mixed plans alike; with
-  ``use_kernel=True`` every step (not just pure decode) runs attention
-  through the native paged-attention Pallas kernel, which walks the page
-  tables in-kernel instead of materializing a gathered contiguous copy
-  of each slot's KV prefix
+  step shape for prefill, decode, mixed and speculative plans alike;
+  with ``use_kernel=True`` every step runs attention through the native
+  paged-attention Pallas kernel, which walks the page tables in-kernel
+  instead of materializing a gathered contiguous copy of each slot's KV
 - :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
-  throughput / occupancy stats
+  throughput / occupancy / acceptance-rate / tokens-per-step stats
+
+The speculative loop (``spec_tokens > 0``) is propose/verify/commit:
+
+1. **propose** — the :class:`~repro.serve.propose.Proposer` drafts up to
+   ``spec_tokens`` tokens per decoding slot on the host (n-gram lookup
+   over the slot's own prompt + generations by default);
+2. **verify** — the scheduler packs committed token + drafts into the
+   slot's chunk columns and ONE batched ``serve_forward`` step returns
+   per-position logits for every slot's live window (``logit_idx``), so
+   verification costs one engine tick regardless of window width;
+3. **commit** — fp32 rejection sampling accepts the longest matching
+   draft prefix plus one corrected/bonus token; the scheduler commits it
+   and ``PagedKVCache.truncate`` rolls the cache length back over the
+   rejected tail (dead positions, no page churn — the next window
+   overwrites them).
+
+With temperature 0 the accept rule is argmax equality, so the greedy
+speculative engine is token-identical to the non-speculative engine —
+speculation changes step count, never output.
 
 Quickstart::
 
@@ -28,17 +54,22 @@ Quickstart::
     from repro.models import transformer as T
 
     params = mpx.cast_to_bfloat16(T.init_params(key, cfg))
-    engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128)
+    engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128,
+                               spec_tokens=3)   # n-gram speculative decode
     for prompt in prompts:
         engine.submit(prompt, max_new=32)
     for result in engine.drain():
-        print(result.request_id, result.tokens)
-    print(engine.stats.summary())
+        print(result.request_id, result.tokens,
+              result.metrics.acceptance_rate)
+    print(engine.stats.summary())   # incl. spec_accept_rate, tokens_per_step
 """
 from repro.serve.cache import PagedKVCache
 from repro.serve.engine import RequestResult, ServeEngine
 from repro.serve.metrics import EngineStats, RequestMetrics
-from repro.serve.sampling import SamplingParams, make_sampler, sample_logits
+from repro.serve.propose import DraftModelProposer, NGramProposer, Proposer
+from repro.serve.sampling import (SamplingParams, make_sampler,
+                                  make_verifier, probs_from_logits,
+                                  rejection_sample, sample_logits)
 from repro.serve.scheduler import Request, Scheduler, StepOutcome, StepPlan
 
 # the legacy monolithic-slab serving step, generalized to take
@@ -47,8 +78,11 @@ from repro.serve.scheduler import Request, Scheduler, StepOutcome, StepPlan
 from repro.train.steps import make_serve_step
 
 __all__ = [
+    "DraftModelProposer",
     "EngineStats",
+    "NGramProposer",
     "PagedKVCache",
+    "Proposer",
     "Request",
     "RequestMetrics",
     "RequestResult",
@@ -59,5 +93,8 @@ __all__ = [
     "StepPlan",
     "make_sampler",
     "make_serve_step",
+    "make_verifier",
+    "probs_from_logits",
+    "rejection_sample",
     "sample_logits",
 ]

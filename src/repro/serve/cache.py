@@ -7,16 +7,25 @@ pages per attention layer, and a page table row per slot mapping logical
 page -> physical page.  Token position ``p`` of slot ``b`` lives at
 ``pages[table[b, p // page_size], p % page_size]``.
 
-Bookkeeping (free list, tables) is host-side numpy — it mutates a few ints
-per request, never touches the device, and stays out of the jitted step.
-The device side is a pytree of page pools (one (num_pages, page_size, K, D)
-K and V array per attention layer, scan-stacked like the params) built by
+Bookkeeping (free list, tables, per-slot lengths) is host-side numpy — it
+mutates a few ints per request, never touches the device, and stays out of
+the jitted step.  The device side is a pytree of page pools (one
+(num_pages, page_size, K, D) K and V array per attention layer,
+scan-stacked like the params) built by
 :func:`repro.models.transformer.init_paged_cache`; all layers share one
 table, so admission allocates pages once per sequence.
 
 Allocation policy: the full budget (prompt + max_new tokens) is reserved at
 admission, so a running request can never hit pool exhaustion mid-decode —
-admission control is the only backpressure point.
+admission control is the only backpressure point.  Speculative decoding
+adds a second, token-granular piece of bookkeeping on top: a step may
+*write* KV for a whole proposed window (``note_write``) and then *commit*
+only the accepted prefix (``truncate``), leaving the rejected tail as dead
+positions beyond the slot's length.  No page churn happens — the pages
+were reserved at admission and the dead positions are overwritten by the
+next window — but the committed/written watermarks make the invariant
+("committed <= written <= reserved capacity, never rolling a committed
+prefix back") explicitly checkable.
 """
 from __future__ import annotations
 
@@ -57,6 +66,11 @@ class PagedKVCache:
         self._tables = np.full((n_slots, self.max_pages_per_slot),
                                self.sentinel, np.int32)
         self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        # per-slot token watermarks: committed <= written <= capacity.
+        # ``written`` is the KV high-water mark (speculative windows write
+        # ahead of the committed length); ``committed`` the accepted prefix.
+        self._committed: List[int] = [0] * n_slots
+        self._written: List[int] = [0] * n_slots
         self._table_device = None        # invalidated on alloc/free
 
     # -- allocation ---------------------------------------------------------
@@ -82,6 +96,8 @@ class PagedKVCache:
         got = [self._free.pop() for _ in range(need)]
         self._owned[slot] = got
         self._tables[slot, :need] = got
+        self._committed[slot] = 0
+        self._written[slot] = 0
         self._table_device = None
         return True
 
@@ -90,7 +106,54 @@ class PagedKVCache:
         self._free.extend(self._owned[slot])
         self._owned[slot] = []
         self._tables[slot, :] = self.sentinel
+        self._committed[slot] = 0
+        self._written[slot] = 0
         self._table_device = None
+
+    # -- length bookkeeping (speculative windows) ---------------------------
+
+    def capacity(self, slot: int) -> int:
+        """Tokens the slot's reserved pages can hold."""
+        return len(self._owned[slot]) * self.page_size
+
+    def slot_length(self, slot: int) -> int:
+        """The slot's committed token count (accepted prefix)."""
+        return self._committed[slot]
+
+    def note_write(self, slot: int, end: int) -> None:
+        """Record that KV for positions ``[0, end)`` has been written.
+
+        The scheduler calls this when it plans a chunk or speculative
+        window for the slot; ``end`` may run ahead of the committed length
+        by the window size but never past the reserved capacity.
+        """
+        if end > self.capacity(slot):
+            raise RuntimeError(
+                f"slot {slot}: write to position {end} exceeds reserved "
+                f"capacity {self.capacity(slot)} "
+                f"({len(self._owned[slot])} pages x {self.page_size})")
+        self._written[slot] = max(self._written[slot], end)
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Commit the slot's length to ``new_len``, discarding any written
+        positions beyond it (rejected speculative tokens).
+
+        The dead tail needs no page churn — pages were reserved at
+        admission and the next window overwrites those positions before
+        anything can read them (attention masks by position).  Raises
+        ``RuntimeError`` if ``new_len`` rolls back a committed prefix or
+        claims positions that were never written.
+        """
+        if new_len < self._committed[slot]:
+            raise RuntimeError(
+                f"slot {slot}: truncate to {new_len} would roll back the "
+                f"committed prefix ({self._committed[slot]} tokens)")
+        if new_len > self._written[slot]:
+            raise RuntimeError(
+                f"slot {slot}: truncate to {new_len} beyond written "
+                f"watermark {self._written[slot]}")
+        self._committed[slot] = new_len
+        self._written[slot] = new_len
 
     # -- views --------------------------------------------------------------
 
@@ -109,11 +172,33 @@ class PagedKVCache:
         return self.num_pages - len(self._free)
 
     def check_invariants(self) -> None:
-        """No page is double-owned, free + owned covers the pool exactly."""
+        """No page is double-owned, free + owned covers the pool exactly,
+        and per-slot lengths respect committed <= written <= capacity.
+
+        Raises ``RuntimeError`` (not ``assert`` — these must survive
+        ``python -O``) on the first violated invariant.
+        """
         owned = [p for row in self._owned for p in row]
-        assert len(owned) == len(set(owned)), "double-allocated page"
-        assert not set(owned) & set(self._free), "page both owned and free"
-        assert len(owned) + len(self._free) == self.num_pages, "leaked page"
+        if len(owned) != len(set(owned)):
+            raise RuntimeError("double-allocated page")
+        if set(owned) & set(self._free):
+            raise RuntimeError("page both owned and free")
+        if len(owned) + len(self._free) != self.num_pages:
+            raise RuntimeError("leaked page")
         for slot, row in enumerate(self._owned):
             mapped = [p for p in self._tables[slot] if p != self.sentinel]
-            assert mapped == row, (slot, mapped, row)
+            if mapped != row:
+                raise RuntimeError(
+                    f"slot {slot}: table/ownership mismatch "
+                    f"(mapped {mapped}, owned {row})")
+            if not (0 <= self._committed[slot] <= self._written[slot]
+                    <= len(row) * self.page_size):
+                raise RuntimeError(
+                    f"slot {slot}: length invariant violated — committed "
+                    f"{self._committed[slot]} <= written "
+                    f"{self._written[slot]} <= capacity "
+                    f"{len(row) * self.page_size} must hold")
+            if not row and self._written[slot]:
+                raise RuntimeError(
+                    f"slot {slot}: nonzero written watermark "
+                    f"{self._written[slot]} with no pages owned")

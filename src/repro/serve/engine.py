@@ -4,22 +4,37 @@ Ties the subsystem together: the paged KV cache (device pools + host
 allocator), the mixed-chunk continuous-batching scheduler (host plans),
 ONE jitted ``(B, chunk_size)`` specialization of the unified
 ``serve_forward`` step — every tick is a mixed plan in which each active
-slot contributes either a prefill chunk or its single pending decode token,
-so there are no separate prefill/decode compiled shapes and decode slots
-never stall behind a long prompt — and fp32 sampling from each slot's last
-valid chunk position.  Per-request TTFT and inter-token latency plus
-aggregate throughput/occupancy are recorded around every device call.
+slot contributes either a prefill chunk or its decode *window* — and fp32
+verification/sampling over each slot's window logits.
+
+Speculative decoding (``spec_tokens > 0``) turns the decode side of every
+tick into a propose/verify/commit loop: a host-side
+:class:`~repro.serve.propose.Proposer` (n-gram prompt lookup by default)
+drafts up to ``spec_tokens`` tokens per decoding slot, the scheduler packs
+committed-token + drafts into the slot's chunk columns, ``serve_forward``
+returns per-position logits for the whole window (``logit_idx`` gather),
+and :func:`repro.serve.sampling.rejection_sample` accepts the longest
+matching prefix plus one corrected/bonus token — so one engine step can
+emit up to ``spec_tokens + 1`` tokens per slot.  ``commit()`` rolls each
+slot's cache length back over the rejected tail
+(:meth:`PagedKVCache.truncate`); with temperature 0 the accept rule is
+argmax equality, making the speculative engine token-identical to the
+non-speculative one.  ``spec_tokens = 0`` is the same compiled program
+shape with a 1-wide window — plain decoding.
 
 When ``use_kernel`` is set, EVERY step — prefill, decode and mixed alike —
 routes attention through the Pallas paged-attention kernel
 (``repro.kernels.paged_attention``): the page table is a scalar-prefetch
 operand and the kernel streams each slot's allocated pages straight from
-the shared pools, so the per-step gathered dense copy of the cache never
-exists and there is still exactly one compiled step program.
+the shared pools (``pages_per_block`` logical pages per K-block), so the
+per-step gathered dense copy of the cache never exists and there is still
+exactly one compiled step program.
 
 Precision: params are expected pre-cast to the serving dtype (bf16); the
-KV pages are bf16; softmax inside the model and the sampling transform are
-fp32 — the inference half of the MPX discipline.
+KV pages are bf16; softmax inside the model, the sampling transforms and
+the rejection-sampling accept/residual rule are fp32 — the inference half
+of the MPX discipline (verification shares softmax's "known-fragile"
+status: a bf16 tail probability flips accept decisions).
 """
 from __future__ import annotations
 
@@ -35,7 +50,8 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.serve.cache import PagedKVCache
 from repro.serve.metrics import EngineStats, RequestMetrics
-from repro.serve.sampling import SamplingParams, make_sampler
+from repro.serve.propose import NGramProposer, Proposer
+from repro.serve.sampling import SamplingParams, make_verifier
 from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
 
 PyTree = Any
@@ -54,10 +70,13 @@ class ServeEngine:
     """Mixed-precision inference engine with paged KV cache.
 
     ``submit()`` enqueues requests; ``step()`` runs one scheduler tick
-    (admit -> one mixed prefill+decode batch step -> retire finished);
-    ``drain()`` steps until idle and returns results ordered by request id.
-    ``max_batched_tokens`` bounds the real tokens per step (decode tokens
-    are planned first; prefill chunks fill the remainder).
+    (admit -> one mixed prefill+decode batch step with window
+    verification -> retire finished); ``drain()`` steps until idle and
+    returns results ordered by request id.  ``max_batched_tokens`` bounds
+    the real tokens per step (committed decode tokens are planned first;
+    draft windows and prefill chunks fill the remainder).
+    ``spec_tokens`` sets the speculative window (0 disables);
+    ``proposer`` overrides the default n-gram prompt-lookup drafter.
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -66,39 +85,55 @@ class ServeEngine:
                  chunk_size: int = 32,
                  max_batched_tokens: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(),
-                 use_kernel: bool = False, seed: int = 0):
+                 spec_tokens: int = 0,
+                 proposer: Optional[Proposer] = None,
+                 use_kernel: bool = False, pages_per_block: int = 1,
+                 seed: int = 0):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} does not support decode")
         self.cfg = cfg
         self.params = params
+        self.spec_tokens = int(spec_tokens)
+        if proposer is not None and self.spec_tokens == 0:
+            raise ValueError(
+                "a proposer without spec_tokens > 0 would never be "
+                "consulted — pass spec_tokens=k to size the speculative "
+                "window")
+        if self.spec_tokens > 0 and proposer is None:
+            proposer = NGramProposer()
+        self.proposer = proposer
         self.cache = PagedKVCache(cfg, n_slots, max_seq,
                                   page_size=page_size, num_pages=num_pages)
         self.scheduler = Scheduler(self.cache, chunk_size=chunk_size,
-                                   max_batched_tokens=max_batched_tokens)
+                                   max_batched_tokens=max_batched_tokens,
+                                   spec_tokens=self.spec_tokens,
+                                   proposer=self.proposer)
         self.sampling = sampling
         self.stats = EngineStats(n_slots)
-        self._sampler = make_sampler(sampling)
         self._key = jax.random.key(seed)
         self._next_id = 0
         self._inflight: dict[int, RequestMetrics] = {}
         self._results: List[RequestResult] = []
         self._result_ids: set[int] = set()   # finished, kept for drain()
 
-        sampler = self._sampler
+        verifier = make_verifier(sampling)
 
-        def raw_step(params, pages, table, tokens, start, valid, key):
-            # serve_forward returns each slot's last-valid-position logits
-            # (B, V) — the unembed already ran once per slot, not per
-            # chunk position; sampling transforms run in fp32
+        def raw_step(params, pages, table, tokens, start, valid,
+                     logit_idx, draft, draft_len, key):
+            # serve_forward returns the (B, W, V) window logits named by
+            # logit_idx — the unembed runs once per window position, not
+            # per chunk position; verification/sampling runs in fp32
             logits, new_pages = tfm.serve_forward(
                 params, cfg, pages, table, tokens, start, valid,
-                page_size=page_size, use_kernel=use_kernel)
-            sampled = sampler(logits, key)
-            return sampled, new_pages
+                logit_idx=logit_idx, page_size=page_size,
+                use_kernel=use_kernel, pages_per_block=pages_per_block)
+            accept, token = verifier(logits, draft, draft_len, key)
+            return accept, token, new_pages
 
         # one compiled step shape AND program: (B, chunk_size) for
         # prefill, decode and mixed plans alike — the paged kernel covers
-        # every plan, so there is no decode-only specialization.
+        # every plan, and the W-wide verify covers spec_tokens = 0 (W=1,
+        # zero drafts) through full windows with no extra specialization.
         self._device_step = jax.jit(raw_step, donate_argnums=(1,))
 
     # -- public API ---------------------------------------------------------
@@ -135,20 +170,36 @@ class ServeEngine:
             key = self._key
         else:
             self._key, key = jax.random.split(self._key)
-        sampled, self.cache.pages = self._device_step(
+        slot_rids = [None if s is None else s.req.request_id
+                     for s in self.scheduler.slots]
+        accept, token, self.cache.pages = self._device_step(
             self.params, self.cache.pages, self.cache.table_device(),
             jnp.asarray(plan.tokens), jnp.asarray(plan.start),
-            jnp.asarray(plan.valid), key)
-        sampled = np.asarray(sampled)                 # blocks on the device
+            jnp.asarray(plan.valid), jnp.asarray(plan.logit_idx),
+            jnp.asarray(plan.draft), jnp.asarray(plan.draft_len), key)
+        accept = np.asarray(accept)                   # blocks on the device
+        token = np.asarray(token)
         now = time.perf_counter()
 
-        outcome = self.scheduler.commit(plan, sampled)
+        # per-request speculation accounting, against the pre-commit
+        # slot->request mapping (commit retires finished slots)
+        for slot_id, rid in enumerate(slot_rids):
+            k = int(plan.draft_len[slot_id])
+            if rid is None or k == 0:
+                continue
+            rm = self._inflight[rid]
+            rm.proposed_tokens += k
+            rm.accepted_tokens += int(accept[slot_id])
+
+        outcome = self.scheduler.commit(plan, token, accept)
         first = set(outcome.first_token)
-        for rid in outcome.emitted:
+        for rid, _ in outcome.emitted:
             rm = self._inflight[rid]
             if rid in first:
                 rm.first_token_time = now
             else:
+                # one gap per request per step: a speculative window's
+                # tokens arrive together, so the gap spans the whole batch
                 self.stats.record_token_gap(now - rm.last_token_time)
             rm.last_token_time = now
         results = []
@@ -162,9 +213,11 @@ class ServeEngine:
                                          slot.req.prompt, slot.out, rm))
         self.stats.record_step(
             plan.kind, self.scheduler.busy_slots + len(outcome.finished),
-            len(outcome.emitted), now - t0,
+            outcome.n_tokens, now - t0,
             prefill_tokens=np.where(plan.kinds == PREFILL, plan.valid, 0),
-            decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0))
+            decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0),
+            proposed=plan.n_draft,
+            accepted=int(accept.sum()))
         self._results.extend(results)
         return results
 

@@ -1,14 +1,20 @@
-"""Serving metrics: per-request TTFT / tok-s, aggregate throughput, ITL.
+"""Serving metrics: per-request TTFT / tok-s, aggregate throughput, ITL,
+speculative acceptance.
 
 Host-side plain Python — recorded around the jitted steps, never inside
 them.  ``EngineStats`` aggregates per-step records (occupancy, tokens,
-wall time, per-slot prefill/decode token counts) and per-request records
-(time-to-first-token, decode rate, inter-token gaps) into the summary the
-benchmarks and the example client print.  The p50/p95 **inter-token
-latency** (gap between consecutive emitted tokens of one request) is the
-metric that makes scheduler stalls visible: under prefill-priority
-scheduling a decode slot's gap spans every step of another slot's prompt;
-under mixed-chunk scheduling it spans exactly one step.
+wall time, per-slot prefill/decode token counts, proposed/accepted draft
+counts) and per-request records (time-to-first-token, decode rate,
+inter-token gaps, acceptance rate) into the summary the benchmarks and
+the example client print.  The p50/p95 **inter-token latency** (gap
+between consecutive emitted tokens of one request) is the metric that
+makes scheduler stalls visible: under prefill-priority scheduling a
+decode slot's gap spans every step of another slot's prompt; under
+mixed-chunk scheduling it spans exactly one step.  With speculative
+decoding a window's tokens arrive together, so one gap is recorded per
+request per step and **tokens per step** becomes the headline speculation
+metric: how many engine steps each generated token costs, the quantity
+the accept rate buys down.
 """
 from __future__ import annotations
 
@@ -27,6 +33,15 @@ class RequestMetrics:
     last_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     new_tokens: int = 0
+    proposed_tokens: int = 0    # speculative drafts the verifier saw
+    accepted_tokens: int = 0    # drafts the verifier accepted
+
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Accepted / proposed draft tokens (None when never speculated)."""
+        if self.proposed_tokens == 0:
+            return None
+        return self.accepted_tokens / self.proposed_tokens
 
     @property
     def ttft(self) -> Optional[float]:
@@ -70,15 +85,20 @@ class EngineStats:
         # and how many decode tokens it stepped (batch-balance diagnostics)
         self.slot_prefill_tokens: List[int] = [0] * n_slots
         self.slot_decode_tokens: List[int] = [0] * n_slots
+        # speculation: drafts offered to / accepted by the verify step
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self.itl_gaps: List[float] = []     # inter-token gaps, all requests
         self.finished: List[RequestMetrics] = []
 
     def record_step(self, kind: str, busy_slots: int, new_tokens: int,
                     dt: float, prefill_tokens=None, decode_tokens=None,
-                    ) -> None:
+                    proposed: int = 0, accepted: int = 0) -> None:
         """``kind`` is "prefill" / "decode" / "mixed"; the optional
         ``prefill_tokens`` / ``decode_tokens`` are per-slot (B,) counts of
-        real tokens this step."""
+        real tokens this step (a decode slot's count includes its
+        speculative window); ``proposed`` / ``accepted`` are the step's
+        draft-token totals."""
         self.steps += 1
         if kind == "prefill":
             self.prefill_steps += 1
@@ -95,6 +115,8 @@ class EngineStats:
         if decode_tokens is not None:
             for b, n in enumerate(decode_tokens):
                 self.slot_decode_tokens[b] += int(n)
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
 
     def record_token_gap(self, gap: float) -> None:
         """One inter-token gap (seconds between consecutive tokens of a
@@ -113,6 +135,19 @@ class EngineStats:
     def throughput_tok_per_s(self) -> float:
         return self.total_new_tokens / max(self.elapsed, 1e-9)
 
+    @property
+    def tokens_per_step(self) -> float:
+        """Generated tokens per engine step — the speculation payoff."""
+        return self.total_new_tokens / self.steps if self.steps else 0.0
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Accepted / proposed drafts over the engine lifetime (0 when the
+        engine never speculated)."""
+        if self.spec_proposed == 0:
+            return 0.0
+        return self.spec_accepted / self.spec_proposed
+
     def summary(self) -> Dict[str, float]:
         ttfts = [rm.ttft for rm in self.finished if rm.ttft is not None]
         out = {
@@ -127,7 +162,11 @@ class EngineStats:
             "decode_tokens_fed": float(sum(self.slot_decode_tokens)),
             "elapsed_s": self.elapsed,
             "tok_per_s": self.throughput_tok_per_s,
+            "tokens_per_step": self.tokens_per_step,
             "mean_occupancy": self.mean_occupancy,
+            "spec_proposed": float(self.spec_proposed),
+            "spec_accepted": float(self.spec_accepted),
+            "spec_accept_rate": self.spec_accept_rate,
         }
         if ttfts:
             out["ttft_mean_s"] = sum(ttfts) / len(ttfts)

@@ -1,0 +1,86 @@
+"""Draft-token proposers for speculative decoding.
+
+The serving engine's speculative loop is propose/verify/commit: a cheap
+*proposer* guesses the next ``k`` tokens of a decoding slot on the host,
+the batched ``serve_forward`` step verifies the whole window (committed
+token + drafts) against the target model in one forward pass, and fp32
+rejection sampling (:func:`repro.serve.sampling.rejection_sample`) keeps
+the longest accepted prefix plus one corrected/bonus token.  A proposer
+never changes the output distribution — a bad guess only wastes the
+window's compute — so proposers are free to be heuristic.
+
+:class:`NGramProposer` is the default: prompt-lookup decoding (the
+draft-model-free scheme of Saxena's prompt-lookup / LLMA) — find the most
+recent earlier occurrence of the context's suffix n-gram and propose its
+historical continuation.  It costs a host-side substring scan, nothing on
+the device, and wins big exactly where serving traffic is repetitive:
+summarization, code edits, retrieval-augmented contexts, agent loops that
+re-quote their own transcript.
+
+:class:`DraftModelProposer` (a small model drafting for a large one) is a
+named follow-on — the interface is here, the implementation is not.
+"""
+from __future__ import annotations
+
+from typing import List, Protocol, Sequence, runtime_checkable
+
+
+@runtime_checkable
+class Proposer(Protocol):
+    """Host-side draft source for one decoding slot."""
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing ``context`` (may be fewer,
+        or empty when the proposer has no guess).  ``context`` is the
+        slot's full token history: prompt + every committed generation,
+        including the pending committed token the window will re-feed."""
+        ...
+
+
+class NGramProposer:
+    """Prompt-lookup drafts: continue the most recent earlier occurrence
+    of the context's suffix n-gram.
+
+    Tries suffix lengths from ``max_ngram`` down to ``min_ngram``; for the
+    first suffix that reappears earlier in the context, proposes the up-to
+    ``k`` tokens that followed that occurrence.  Deterministic (the draft
+    distribution is a one-hot), so the verify step's accept rule reduces
+    to the target probability of the proposed token.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"min_ngram={min_ngram} max_ngram={max_ngram}")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        ctx = list(context)
+        if k <= 0 or len(ctx) < self.min_ngram + 1:
+            return []
+        for n in range(min(self.max_ngram, len(ctx) - 1),
+                       self.min_ngram - 1, -1):
+            suffix = ctx[-n:]
+            # most recent earlier occurrence with a non-empty continuation
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i:i + n] == suffix:
+                    return ctx[i + n:i + n + k]
+        return []
+
+
+class DraftModelProposer:
+    """Draft-model speculation stub (named follow-on).
+
+    Running a small transformer as the drafter needs its own decode state
+    threaded through the engine tick; this PR ships the host-side n-gram
+    proposer and the verify/commit machinery only.
+    """
+
+    def __init__(self, *args, **kwargs):
+        raise NotImplementedError(
+            "draft-model proposer is a follow-on; use NGramProposer")
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        raise NotImplementedError

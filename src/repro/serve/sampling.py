@@ -4,11 +4,15 @@ The model's head emits logits in the compute dtype (bf16 on the serving
 path).  Sampling is one of the paper's "known-fragile spots": softmax over
 a 100k-entry vocabulary in bf16 loses the tail, and temperature/top-p
 renormalization compounds it.  Every transform here upcasts once to fp32
-and stays there; only the sampled token ids leave.
+and stays there; only the sampled token ids (and, for speculative
+verification, accepted-prefix counts) leave.
 
 ``SamplingParams`` is static configuration — ``make_sampler`` closes over
 it so the jitted step specializes (greedy compiles to a bare argmax with
-no PRNG traffic).
+no PRNG traffic).  Samplers return *probabilities alongside ids*: the
+speculative-decoding verify step needs the full post-transform
+distribution, not just its sample, to run the Leviathan accept/residual
+rule (:func:`rejection_sample`) in fp32 over the bf16 window logits.
 """
 from __future__ import annotations
 
@@ -50,16 +54,60 @@ def _apply_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def _apply_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus filter via a per-row threshold, no full-vocab scatter.
+
+    The sorted pass computes, per row, the *smallest surviving logit*
+    (every token whose preceding cumulative mass is < p survives — the
+    top token always does, even when its own probability exceeds p); the
+    filter is then a ``jnp.where`` against that threshold on the original
+    layout.  Equivalent to scattering the filtered sorted logits back
+    through ``sorted_idx``, without materializing a second (..., V)
+    scatter buffer — except at exact ties with the threshold logit, where
+    ALL tied tokens survive.  Ties are real on the serving path (bf16
+    head logits quantize many tail tokens to equal values even after the
+    fp32 upcast), so this is a deliberate semantic choice, not a corner
+    case: the kept nucleus is a deterministic, token-order-independent
+    superset of the scatter formulation's, which broke ties by sort
+    position — an ordering just as arbitrary with respect to p, since
+    the boundary token already overshoots the target mass by definition.
+    """
     vocab = logits.shape[-1]
-    sorted_l, sorted_idx = jax.lax.top_k(logits, vocab)
+    sorted_l = jax.lax.top_k(logits, vocab)[0]
     probs = jax.nn.softmax(sorted_l, axis=-1)
-    # keep every token whose preceding cumulative mass is < p (the first
-    # token always survives, even when its own probability exceeds p)
     cum_before = jnp.cumsum(probs, axis=-1) - probs
-    sorted_l = jnp.where(cum_before < p, sorted_l, NEG_INF)
-    out = jnp.full_like(logits, NEG_INF)
-    batch = jnp.arange(logits.shape[0])[:, None]
-    return out.at[batch, sorted_idx].set(sorted_l)
+    thresh = jnp.min(jnp.where(cum_before < p, sorted_l, jnp.inf),
+                     axis=-1, keepdims=True)
+    return jnp.where(logits >= thresh, logits, NEG_INF)
+
+
+def transform_logits(logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
+    """(..., V) any float -> fp32 logits with temperature/top-k/top-p
+    applied.  Greedy (temperature 0) is the caller's argmax fast path —
+    this function requires temperature > 0."""
+    if sp.is_greedy:
+        raise ValueError("transform_logits needs temperature > 0; "
+                         "greedy sampling is a bare argmax")
+    l32 = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
+        l32 = _apply_top_k(l32, sp.top_k)
+    if sp.top_p < 1.0:
+        l32 = _apply_top_p(l32, sp.top_p)
+    return l32
+
+
+def probs_from_logits(logits: jnp.ndarray, sp: SamplingParams
+                      ) -> jnp.ndarray:
+    """(..., V) -> fp32 post-transform probabilities.
+
+    Greedy collapses to a one-hot at the fp32 argmax — the degenerate
+    distribution the rejection-sampling accept rule needs so that
+    temperature=0 speculative decoding is exactly greedy decoding.
+    """
+    l32 = logits.astype(jnp.float32)
+    if sp.is_greedy:
+        return jax.nn.one_hot(jnp.argmax(l32, axis=-1), l32.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(transform_logits(l32, sp), axis=-1)
 
 
 def sample_logits(logits: jnp.ndarray, key, sp: SamplingParams,
@@ -68,18 +116,107 @@ def sample_logits(logits: jnp.ndarray, key, sp: SamplingParams,
     l32 = logits.astype(jnp.float32)
     if sp.is_greedy:
         return jnp.argmax(l32, axis=-1).astype(jnp.int32)
-    l32 = l32 / sp.temperature
-    if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
-        l32 = _apply_top_k(l32, sp.top_k)
-    if sp.top_p < 1.0:
-        l32 = _apply_top_p(l32, sp.top_p)
-    return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, transform_logits(l32, sp),
+                                  axis=-1).astype(jnp.int32)
 
 
 def make_sampler(sp: SamplingParams):
-    """Returns a jittable ``sampler(logits (B, V), key) -> (B,) int32``."""
+    """Returns a jittable ``sampler(logits (B, V), key) -> (ids, probs)``.
+
+    ``ids`` is (B,) int32; ``probs`` is the (B, V) fp32 post-transform
+    distribution the ids were drawn from (one-hot for greedy).  Samplers
+    expose the distribution, not just its sample, because speculative
+    verification is distribution-level (accept/residual needs target
+    mass, see :func:`rejection_sample`); callers that only decode ignore
+    the second element, and under jit the unused softmax is dead-code
+    eliminated.
+    """
 
     def sampler(logits, key):
-        return sample_logits(logits, key, sp)
+        return sample_logits(logits, key, sp), probs_from_logits(logits, sp)
 
     return sampler
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: fp32 rejection sampling over window logits
+# --------------------------------------------------------------------------
+
+def rejection_sample(logits: jnp.ndarray, draft: jnp.ndarray,
+                     draft_len: jnp.ndarray, key, sp: SamplingParams,
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Leviathan-style accept/residual verification, fp32 over bf16 logits.
+
+    ``logits`` (B, W, V): row ``j`` is the target model's distribution for
+    the token *after* window position ``j`` (window position 0 is the
+    slot's committed token, positions 1..k its proposed draft).  ``draft``
+    (B, W-1) int32: proposed token ``j`` was fed at window position
+    ``j + 1``, so it is verified against row ``j``.  ``draft_len`` (B,)
+    is each slot's live draft count (0 = no speculation: plain sampling
+    from row 0, which is how prefill slots and non-speculative decode
+    flow through the same jitted step).
+
+    Returns ``(accept (B,) int32, token (B,) int32)``: the accepted draft
+    prefix length and the one extra sampled token — a residual-corrected
+    token when a draft was rejected, a bonus token from the row after the
+    last draft when everything was accepted.  Either way each slot emits
+    ``accept + 1`` tokens per step.
+
+    The proposer is deterministic (a host-side n-gram lookup), i.e. the
+    draft distribution q is a one-hot, so the accept rule
+    ``u < min(1, p(d)/q(d))`` reduces to ``u < p(d)`` and the residual
+    ``normalize(max(p - q, 0))`` to p with the rejected token zeroed.
+    With temperature 0 the target p is itself a one-hot at the argmax
+    (see :func:`probs_from_logits`), so acceptance is exact argmax
+    equality and the corrected token is the argmax — token-identical to
+    non-speculative greedy decoding, the property the engine tests pin.
+    """
+    b, w, _ = logits.shape
+    kmax = w - 1
+    l32 = logits.astype(jnp.float32)
+    jj = jnp.arange(kmax)[None, :]
+    live = jj < draft_len[:, None]                           # (B, kmax)
+
+    if sp.is_greedy:
+        am = jnp.argmax(l32, axis=-1).astype(jnp.int32)      # (B, W)
+        ok = (draft == am[:, :kmax]) & live
+        accept = jnp.cumprod(ok.astype(jnp.int32), axis=-1).sum(axis=-1)
+        token = jnp.take_along_axis(am, accept[:, None], axis=1)[:, 0]
+        return accept.astype(jnp.int32), token
+
+    probs = probs_from_logits(l32, sp)                       # (B, W, V) fp32
+    if kmax > 0:
+        p_draft = jnp.take_along_axis(probs[:, :kmax], draft[..., None],
+                                      axis=-1)[..., 0]       # (B, kmax)
+        key, ku = jax.random.split(key)
+        u = jax.random.uniform(ku, (b, kmax))
+        ok = (u < p_draft) & live
+        accept = jnp.cumprod(ok.astype(jnp.int32), axis=-1).sum(axis=-1)
+    else:
+        accept = jnp.zeros((b,), jnp.int32)
+    row = jnp.take_along_axis(probs, accept[:, None, None], axis=1)[:, 0]
+    if kmax > 0:
+        # residual on rejection: zero the rejected draft token's mass
+        # (q is one-hot, so max(p - q, 0) is p with that entry removed);
+        # categorical renormalizes, and rejection implies p(d) < 1 so the
+        # residual always has mass
+        rejected = accept < draft_len
+        d_rej = jnp.take_along_axis(
+            draft, jnp.minimum(accept, kmax - 1)[:, None], axis=1)[:, 0]
+        hot = jax.nn.one_hot(d_rej, row.shape[-1], dtype=row.dtype)
+        row = jnp.where(rejected[:, None], row * (1.0 - hot), row)
+    token = jax.random.categorical(key, jnp.log(jnp.maximum(row, 1e-30)),
+                                   axis=-1)
+    return accept.astype(jnp.int32), token.astype(jnp.int32)
+
+
+def make_verifier(sp: SamplingParams):
+    """Returns a jittable ``verify(logits (B, W, V), draft (B, W-1),
+    draft_len (B,), key) -> (accept (B,), token (B,))`` closure over the
+    static sampling configuration — the device half of the speculative
+    propose/verify/commit loop."""
+
+    def verify(logits, draft, draft_len, key):
+        return rejection_sample(logits, draft, draft_len, key, sp)
+
+    return verify

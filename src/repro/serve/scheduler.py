@@ -1,4 +1,5 @@
-"""Continuous batching with mixed prefill+decode chunk steps.
+"""Continuous batching with mixed prefill+decode chunk steps and
+speculative decode windows.
 
 Host-side slot bookkeeping: a FIFO of waiting requests, ``n_slots``
 decode slots, and per-step batch plans for the engine's jitted step.
@@ -10,16 +11,27 @@ refill, which is the whole point of continuous batching.
 Every step is one *mixed* ``(B, chunk_size)`` plan: each active slot
 contributes either its next prefill chunk (a prompt runs through the model
 ``chunk_size`` tokens at a time via the batched ``serve_forward`` entry
-point — one matmul over the chunk, not token-by-token decode) or its single
-pending decode token.  Decode slots therefore keep emitting tokens while
-other slots are mid-prefill — there is no prefill-priority phase in which
-in-flight generations stall behind a long prompt (Orca-style iteration-level
-scheduling).  A per-step token budget (``max_batched_tokens``, vLLM-style)
-bounds the total real tokens in a step: decode tokens are planned first
-(each costs one token and is latency-critical), then prefill chunks are
-truncated to the remaining budget, so prefill work cannot unboundedly
-inflate inter-token latency.  Slots not contributing to a step carry
-``valid = 0`` and are masked inside the model.
+point — one matmul over the chunk, not token-by-token decode) or its
+decode *window*.  Without speculation the window is the single pending
+decode token; with a :class:`~repro.serve.propose.Proposer` configured
+(``spec_tokens > 0``) a decoding slot contributes up to ``1 + k`` tokens —
+the committed token plus ``k`` host-proposed drafts — and the whole window
+is verified by the model in the same batched step that would have decoded
+one token.  ``commit()`` then keeps the accepted prefix (plus the
+corrected/bonus token from rejection sampling) and rolls the slot's cache
+length back over the rejected tail (:meth:`PagedKVCache.truncate` — the
+dead KV positions are overwritten by the next window, no page churn).
+
+Decode slots keep emitting tokens while other slots are mid-prefill —
+there is no prefill-priority phase in which in-flight generations stall
+behind a long prompt (Orca-style iteration-level scheduling).  A per-step
+token budget (``max_batched_tokens``, vLLM-style) bounds the total real
+tokens in a step: each decode slot's committed token is planned first
+(latency-critical, the budget always covers one per slot), then prefill
+chunks, then speculative drafts from the genuinely spare remainder — a
+window can never starve a prefilling slot of budget forever, and a
+prefilling slot that gets no budget sits the step out (``valid = 0``)
+and retries next step.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ from typing import Deque, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.serve.cache import PagedKVCache
+from repro.serve.propose import Proposer
 
 #: per-slot step kinds in :class:`StepPlan.kinds`
 IDLE, PREFILL, DECODE = 0, 1, 2
@@ -53,7 +66,7 @@ class Request:
 class _Slot:
     req: Request
     fed: int = 0          # prompt tokens written to the cache so far
-    length: int = 0       # total cached tokens (prompt + fed generations)
+    length: int = 0       # committed cached tokens (prompt + accepted gen)
     out: List[int] = dataclasses.field(default_factory=list)
     next_token: int = -1  # sampled but not yet fed to a decode step
 
@@ -73,14 +86,22 @@ class StepPlan:
     ``tokens`` is always ``(n_slots, chunk_size)`` — one compiled step
     shape.  ``kinds[b]`` says what slot ``b`` contributes (IDLE / PREFILL /
     DECODE); ``valid[b]`` is its real-token count (prefill: chunk length,
-    decode: 1, idle: 0).  ``decode_only`` is True when no slot prefills
-    this step — informational (stats / tracing) since the paged-attention
-    kernel covers prefill, decode and mixed plans with one program.
+    decode: 1 + draft window, idle: 0).  ``draft`` / ``draft_len`` carry
+    each decode slot's proposed tokens (fed at chunk columns ``1..k``) for
+    the verify step's rejection sampler; ``logit_idx[b]`` names the chunk
+    positions whose logits the step must return — the whole live window
+    for a decode slot, the last valid position (broadcast) for prefill.
+    ``decode_only`` is True when no slot prefills this step —
+    informational (stats / tracing) since the paged-attention kernel
+    covers prefill, decode and mixed plans with one program.
     """
     tokens: np.ndarray      # (B, C) int32
     start: np.ndarray       # (B,)   int32 absolute position of tokens[:, 0]
     valid: np.ndarray       # (B,)   int32 real tokens per slot
     kinds: np.ndarray       # (B,)   int8  IDLE | PREFILL | DECODE
+    draft: np.ndarray       # (B, K) int32 proposed tokens (window cols 1..)
+    draft_len: np.ndarray   # (B,)   int32 live drafts per slot
+    logit_idx: np.ndarray   # (B, W) int32 chunk positions to unembed
     decode_only: bool
 
     @property
@@ -96,25 +117,43 @@ class StepPlan:
     def n_tokens(self) -> int:
         return int(self.valid.sum())
 
+    @property
+    def n_draft(self) -> int:
+        return int(self.draft_len.sum())
+
 
 @dataclasses.dataclass
 class StepOutcome:
-    """Host-side result of committing one step's sampled tokens."""
-    emitted: List[int]                  # request ids that gained a token
-    first_token: List[int]              # subset: ids whose first token
+    """Host-side result of committing one step's verified tokens."""
+    emitted: List[Tuple[int, int]]      # (request id, tokens gained)
+    first_token: List[int]              # ids whose first token this step
     finished: List[Tuple[int, _Slot]]   # (slot_id, slot), already retired
+
+    @property
+    def n_tokens(self) -> int:
+        return sum(n for _, n in self.emitted)
 
 
 class Scheduler:
     """Admission, mixed-chunk planning, and completion bookkeeping."""
 
     def __init__(self, cache: PagedKVCache, chunk_size: int = 32,
-                 max_batched_tokens: Optional[int] = None):
+                 max_batched_tokens: Optional[int] = None,
+                 spec_tokens: int = 0,
+                 proposer: Optional[Proposer] = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
+        if spec_tokens < 0:
+            raise ValueError(f"spec_tokens must be >= 0: {spec_tokens}")
+        if spec_tokens + 1 > chunk_size:
+            raise ValueError(
+                f"speculative window {spec_tokens + 1} (spec_tokens + "
+                f"committed token) must fit in chunk_size {chunk_size}")
         self.cache = cache
         self.n_slots = cache.n_slots
         self.chunk_size = chunk_size
+        self.spec_tokens = spec_tokens
+        self.proposer = proposer
         if max_batched_tokens is None:
             # never throttles: every slot can contribute a full chunk
             max_batched_tokens = self.n_slots * chunk_size
@@ -191,26 +230,32 @@ class Scheduler:
     def plan(self) -> StepPlan:
         """One mixed ``(B, chunk_size)`` step plan under the token budget.
 
-        Decode slots are planned first (1 token each — the budget always
-        covers a full decode batch, see ``__init__``); prefilling slots
-        then take ``min(chunk_size, remaining prompt, remaining budget)``
-        tokens each, FCFS by slot id.  A prefilling slot that gets no
-        budget sits the step out (``valid = 0``) and retries next step.
+        Budget order: each decode slot's committed token first (1 each —
+        the budget always covers a full decode batch, see ``__init__``),
+        then prefill chunks (``min(chunk_size, remaining prompt,
+        remaining budget)`` FCFS by slot id), then speculative drafts
+        from whatever is left.  Drafts are opportunistic throughput —
+        funding them *after* prefill reservation guarantees a prefilling
+        slot can never be starved forever by other slots' windows under a
+        tight budget (a prefilling slot that still gets no budget sits
+        the step out with ``valid = 0`` and retries next step).  Each
+        window is additionally capped by ``max_new`` (it never claims
+        tokens the request could not emit, which also keeps the window
+        inside the slot's page reservation) and by ``spec_tokens``.
         """
         c = self.chunk_size
+        w = self.spec_tokens + 1
         tokens = np.zeros((self.n_slots, c), np.int32)
         start = np.zeros(self.n_slots, np.int32)
         valid = np.zeros(self.n_slots, np.int32)
         kinds = np.zeros(self.n_slots, np.int8)
+        draft = np.zeros((self.n_slots, self.spec_tokens), np.int32)
+        draft_len = np.zeros(self.n_slots, np.int32)
+        logit_idx = np.zeros((self.n_slots, w), np.int32)
         budget = self.max_batched_tokens
-        for slot_id, slot in enumerate(self.slots):
-            if slot is None or slot.prefilling:
-                continue
-            tokens[slot_id, 0] = slot.next_token
-            start[slot_id] = slot.length
-            valid[slot_id] = 1
-            kinds[slot_id] = DECODE
-            budget -= 1
+        decoding = [(i, s) for i, s in enumerate(self.slots)
+                    if s is not None and not s.prefilling]
+        budget -= len(decoding)              # 1 committed token per slot
         for slot_id, slot in enumerate(self.slots):
             if slot is None or not slot.prefilling or budget <= 0:
                 continue
@@ -219,40 +264,84 @@ class Scheduler:
             start[slot_id] = slot.fed
             valid[slot_id] = take
             kinds[slot_id] = PREFILL
+            logit_idx[slot_id] = take - 1    # only the last position samples
             budget -= take
-        return StepPlan(tokens, start, valid, kinds,
+            self.cache.note_write(slot_id, slot.fed + take)
+        for slot_id, slot in decoding:
+            tokens[slot_id, 0] = slot.next_token
+            start[slot_id] = slot.length
+            valid[slot_id] = 1
+            kinds[slot_id] = DECODE
+            if self.proposer is not None and self.spec_tokens > 0:
+                remaining = slot.req.max_new - len(slot.out)
+                k_cap = min(self.spec_tokens, remaining - 1, budget)
+                if k_cap > 0:
+                    prop = self.proposer.propose(
+                        slot.req.prompt + slot.out, k_cap)[:k_cap]
+                    if prop:
+                        k = len(prop)
+                        tokens[slot_id, 1:1 + k] = prop
+                        draft[slot_id, :k] = prop
+                        draft_len[slot_id] = k
+                        valid[slot_id] = 1 + k
+                        budget -= k
+            logit_idx[slot_id] = np.minimum(np.arange(w),
+                                            valid[slot_id] - 1)
+            self.cache.note_write(slot_id,
+                                  int(start[slot_id] + valid[slot_id]))
+        return StepPlan(tokens, start, valid, kinds, draft, draft_len,
+                        logit_idx,
                         decode_only=not bool((kinds == PREFILL).any()))
 
     # -- completion ---------------------------------------------------------
 
-    def commit(self, plan: StepPlan, sampled: Sequence[int]) -> StepOutcome:
-        """Apply one step's sampled tokens to the slot state.
+    def commit(self, plan: StepPlan, sampled: Sequence[int],
+               accept: Optional[Sequence[int]] = None) -> StepOutcome:
+        """Apply one step's verified tokens to the slot state.
 
-        Prefill-vs-decode is derived per slot from the slot's own state
-        (a slot with unfed prompt tokens was fed prompt this step), not
-        from a global step kind — a single commit handles mixed steps.
+        ``sampled[b]`` is slot ``b``'s one new sampled token (the only
+        token without cached KV — it feeds the next window); ``accept[b]``
+        its accepted-draft count from rejection sampling (``None`` means
+        no speculation: zero everywhere).  A decode slot therefore gains
+        ``accept + 1`` tokens and its committed length advances past the
+        accepted prefix — :meth:`PagedKVCache.truncate` discards the
+        rejected tail's KV writes.  Prefill-vs-decode is derived per slot
+        from the slot's own state (a slot with unfed prompt tokens was fed
+        prompt this step), not from a global step kind — a single commit
+        handles mixed steps.
         """
-        emitted: List[int] = []
+        if accept is None:
+            accept = np.zeros(self.n_slots, np.int32)
+        emitted: List[Tuple[int, int]] = []
         first_token: List[int] = []
         finished: List[Tuple[int, _Slot]] = []
         for slot_id, slot in enumerate(self.slots):
             if slot is None or plan.valid[slot_id] == 0:
                 continue
+            rid = slot.req.request_id
             if slot.prefilling:
                 slot.fed += int(plan.valid[slot_id])
                 slot.length = slot.fed
+                self.cache.truncate(slot_id, slot.length)
                 if not slot.prefilling:    # prompt fully cached: the last
                     tok = int(sampled[slot_id])  # position's logits sampled
                     slot.out.append(tok)
                     slot.next_token = tok
-                    first_token.append(slot.req.request_id)
-                    emitted.append(slot.req.request_id)
+                    first_token.append(rid)
+                    emitted.append((rid, 1))
             else:
-                tok = int(sampled[slot_id])
-                slot.out.append(tok)
-                slot.next_token = tok
-                slot.length += 1
-                emitted.append(slot.req.request_id)
+                a = int(accept[slot_id])
+                if a > int(plan.draft_len[slot_id]):
+                    raise RuntimeError(
+                        f"slot {slot_id}: verifier accepted {a} of "
+                        f"{int(plan.draft_len[slot_id])} drafts")
+                new = [int(t) for t in plan.draft[slot_id, :a]]
+                new.append(int(sampled[slot_id]))
+                slot.out.extend(new)
+                slot.next_token = new[-1]
+                slot.length += len(new)
+                self.cache.truncate(slot_id, slot.length)
+                emitted.append((rid, len(new)))
             if slot.done:
                 finished.append((slot_id, self._retire(slot_id)))
         return StepOutcome(emitted, first_token, finished)

@@ -197,7 +197,7 @@ def make_serve_step(cfg: ModelConfig, sampling=None) -> Callable:
 
     def serve_step(params, cache, tokens, pos, key):
         logits, new_cache = tfm.decode(params, cfg, cache, tokens, pos)
-        next_tokens = sampler(logits[:, -1], key)
-        return next_tokens[:, None], new_cache
+        next_tokens, _ = sampler(logits[:, -1], key)   # ids only; the probs
+        return next_tokens[:, None], new_cache         # feed spec verify
 
     return serve_step

@@ -86,6 +86,63 @@ def test_paged_kernel_vs_ref_ragged(dtype, page_size, c):
         assert (got[1, 1:] == 0).all() and (got[2, 1:] == 0).all()
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ppb", [1, 2, 4])
+def test_paged_kernel_pages_per_block_parity(dtype, ppb):
+    """Multi-page K-blocks (pages_per_block logical pages concatenated per
+    grid step — the MXU-lane-filling follow-on) are numerically identical
+    to the one-page-per-step kernel and to the ragged oracle, including
+    ragged tails where a block straddles a slot's length and blocks whose
+    later sub-pages fall entirely past it."""
+    b, c, h, kv, d = 4, 8, 8, 2, 32
+    page_size, pmax = 8, 6
+    n_pages = 4 * pmax
+    # lengths chosen to land mid-page, mid-block and at block boundaries
+    start = np.array([11, 2 * page_size + 3, 0, 0], np.int32)
+    valid = np.array([c, 1, 1, 0], np.int32)
+    q, pk, pv, table = _random_paged_case(
+        0, b, c, h, kv, d, n_pages, page_size, pmax, start, valid, dtype)
+    got = paged_attention(q, pk, pv, table, jnp.asarray(start),
+                          jnp.asarray(valid), pages_per_block=ppb,
+                          interpret=True)
+    got = np.asarray(got, np.float32)
+    assert np.isfinite(got).all()       # NaN-poisoned free pages never read
+    want = kref.paged_attention_ref(q, pk, pv, table, jnp.asarray(start),
+                                    jnp.asarray(valid))
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+    base = paged_attention(q, pk, pv, table, jnp.asarray(start),
+                           jnp.asarray(valid), pages_per_block=1,
+                           interpret=True)
+    if ppb > 1 and dtype == jnp.float32:
+        # widening the block changes the summation grouping, not the math
+        np.testing.assert_allclose(got, np.asarray(base, np.float32),
+                                   atol=1e-6, rtol=1e-6)
+    assert (got[3] == 0).all()          # idle slot stays exact zeros
+
+
+def test_paged_kernel_pages_per_block_clamps_to_pmax():
+    """pages_per_block beyond the table width degrades to one grid step
+    spanning every logical page."""
+    b, c, h, kv, d, page_size, pmax = 2, 4, 4, 2, 16, 8, 4
+    start = np.array([5, 9], np.int32)
+    valid = np.array([c, 1], np.int32)
+    q, pk, pv, table = _random_paged_case(
+        1, b, c, h, kv, d, 3 * pmax, page_size, pmax, start, valid,
+        jnp.float32)
+    got = paged_attention(q, pk, pv, table, jnp.asarray(start),
+                          jnp.asarray(valid), pages_per_block=64,
+                          interpret=True)
+    want = kref.paged_attention_ref(q, pk, pv, table, jnp.asarray(start),
+                                    jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-5, rtol=2e-5)
+    with pytest.raises(ValueError, match="pages_per_block"):
+        paged_attention(q, pk, pv, table, start, valid, pages_per_block=0,
+                        interpret=True)
+
+
 def test_paged_kernel_gqa_and_mha():
     """K == H (no grouping) and K < H (group resident) both match."""
     b, c, d, page_size, pmax = 2, 4, 16, 8, 4

@@ -1,0 +1,168 @@
+"""Sampling transforms and distributions: top-p threshold filter vs the
+scatter formulation, and statistical checks of temperature/top-k/top-p
+(and rejection sampling) against a numpy reference over many draws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.serve.sampling import (NEG_INF, SamplingParams, _apply_top_p,
+                                  transform_logits)
+
+pytestmark = pytest.mark.serve
+
+
+# --------------------------------------------------------------------------
+# top-p: threshold filter pins the scatter formulation's token survival
+# --------------------------------------------------------------------------
+
+def _top_p_scatter_ref(logits, p):
+    """The pre-refactor full-vocab-scatter formulation (oracle)."""
+    vocab = logits.shape[-1]
+    sorted_l, sorted_idx = jax.lax.top_k(logits, vocab)
+    probs = jax.nn.softmax(sorted_l, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    sorted_l = jnp.where(cum_before < p, sorted_l, NEG_INF)
+    out = jnp.full_like(logits, NEG_INF)
+    batch = jnp.arange(logits.shape[0])[:, None]
+    return out.at[batch, sorted_idx].set(sorted_l)
+
+
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.7, 0.95, 0.999])
+def test_top_p_threshold_matches_scatter(p):
+    """Identical token survival AND surviving values, no (B, V) scatter."""
+    logits = 3.0 * jax.random.normal(jax.random.key(17), (8, 64), jnp.float32)
+    got = _apply_top_p(logits, p)
+    want = _top_p_scatter_ref(logits, p)
+    got_keep = np.asarray(got) > NEG_INF / 2
+    want_keep = np.asarray(want) > NEG_INF / 2
+    np.testing.assert_array_equal(got_keep, want_keep)
+    np.testing.assert_allclose(np.asarray(got)[got_keep],
+                               np.asarray(want)[want_keep])
+    # the top token always survives, even when its own mass exceeds p
+    assert got_keep[np.arange(8), np.asarray(jnp.argmax(logits, -1))].all()
+
+
+def test_top_p_threshold_ties_keep_whole_tie_class():
+    """Logits tied with the boundary value ALL survive (deterministic,
+    token-order-independent) — the documented divergence from the scatter
+    formulation, which broke ties by sort position.  Ties are real on the
+    serving path: bf16 head logits quantize tail tokens to equal values."""
+    logits = jnp.asarray([[2.0, 1.0, 1.0, 1.0, 0.0]], jnp.float32)
+    # softmax mass: top token ~0.46; p=0.5 -> threshold is the first 1.0,
+    # and every 1.0 survives with it
+    out = np.asarray(_apply_top_p(logits, 0.5))[0]
+    assert (out[:4] > NEG_INF / 2).all() and out[4] < NEG_INF / 2
+
+
+def test_top_p_one_keeps_everything_implicitly():
+    """top_p=1.0 is a no-op at the SamplingParams level (never filtered)."""
+    sp = SamplingParams(temperature=1.0, top_p=1.0)
+    logits = jax.random.normal(jax.random.key(0), (2, 16))
+    np.testing.assert_allclose(np.asarray(transform_logits(logits, sp)),
+                               np.asarray(logits, np.float32), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# statistical: sampled frequencies vs a numpy reference distribution
+# --------------------------------------------------------------------------
+
+def _numpy_reference_dist(logits, sp: SamplingParams):
+    """Expected sampling distribution computed independently in numpy."""
+    l = np.asarray(logits, np.float64) / sp.temperature
+    if sp.top_k > 0 and sp.top_k < l.shape[-1]:
+        kth = np.sort(l)[..., -sp.top_k]
+        l = np.where(l < kth, -np.inf, l)
+    if sp.top_p < 1.0:
+        order = np.argsort(-l)
+        sl = l[order]
+        pr = np.exp(sl - sl.max())
+        pr = pr / pr.sum()
+        cum_before = np.cumsum(pr) - pr
+        drop = order[cum_before >= sp.top_p]
+        l[drop] = -np.inf
+    e = np.exp(l - l[np.isfinite(l)].max())
+    e[~np.isfinite(l)] = 0.0
+    return e / e.sum()
+
+
+def _empirical(tokens, vocab):
+    return np.bincount(np.asarray(tokens), minlength=vocab) / len(tokens)
+
+
+def _draw(logits_row, sp, n, seed):
+    """n independent draws in ONE device call (batch the row n times)."""
+    tiled = jnp.tile(jnp.asarray(logits_row, jnp.float32)[None], (n, 1))
+    return serve.sample_logits(tiled, jax.random.key(seed), sp)
+
+
+@pytest.mark.slow
+def test_sampling_distributions_match_numpy_reference():
+    """Temperature / top-k / top-p empirical frequencies track the numpy
+    reference within total-variation tolerance (hypothesis-seeded logits
+    when hypothesis is installed, a fixed sweep otherwise)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    vocab, n = 24, 8000
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           case=st.sampled_from([
+               SamplingParams(temperature=0.7),
+               SamplingParams(temperature=1.3, top_k=5),
+               SamplingParams(temperature=1.0, top_p=0.8),
+               SamplingParams(temperature=2.0, top_k=8, top_p=0.9),
+           ]))
+    def prop(seed, case):
+        rng = np.random.default_rng(seed)
+        logits = rng.normal(0.0, 2.0, vocab).astype(np.float32)
+        want = _numpy_reference_dist(logits, case)
+        got = _empirical(_draw(logits, case, n, seed), vocab)
+        tv = 0.5 * np.abs(got - want).sum()
+        assert tv < 0.06, (case, tv)
+        # truncation support is exact, not just close: no forbidden token
+        assert got[want == 0].sum() == 0.0
+
+    prop()
+
+
+@pytest.mark.slow
+def test_rejection_sampling_preserves_target_distribution():
+    """Leviathan guarantee: the marginal of the first emitted token under
+    accept/residual equals the target distribution row 0, whatever the
+    (deterministic) draft token — measured over many independent slots."""
+    vocab, n = 16, 8000
+    rng = np.random.default_rng(3)
+    row = rng.normal(0.0, 1.5, vocab).astype(np.float32)
+    sp = SamplingParams(temperature=0.9)
+    want = _numpy_reference_dist(row, sp)
+    for d in (int(np.argmax(row)), int(np.argmin(row)), 5):
+        logits = jnp.tile(jnp.asarray(row)[None, None], (n, 2, 1))
+        draft = jnp.full((n, 1), d, jnp.int32)
+        accept, token = serve.rejection_sample(
+            logits, draft, jnp.ones((n,), jnp.int32), jax.random.key(d), sp)
+        accept, token = np.asarray(accept), np.asarray(token)
+        first = np.where(accept > 0, d, token)
+        tv = 0.5 * np.abs(_empirical(first, vocab) - want).sum()
+        assert tv < 0.06, (d, tv)
+        # acceptance probability is the target mass of the draft token
+        assert abs(accept.mean() - want[d]) < 0.03
+
+
+def test_make_sampler_returns_ids_and_probs():
+    """Samplers expose the post-transform distribution alongside ids —
+    the verify step consumes the probs, plain serving the ids."""
+    logits = jax.random.normal(jax.random.key(2), (4, 32), jnp.bfloat16)
+    ids, probs = serve.make_sampler(SamplingParams())(logits, None)
+    assert ids.shape == (4,) and probs.shape == (4, 32)
+    assert probs.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(probs, -1)),
+                                  np.asarray(ids))          # greedy one-hot
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-6)
+    sp = SamplingParams(temperature=1.0, top_k=4)
+    l32 = jax.random.normal(jax.random.key(3), (4, 32), jnp.float32)
+    ids, probs = serve.make_sampler(sp)(l32, jax.random.key(0))
+    assert np.all(np.asarray(probs > 0).sum(-1) == 4)       # truncated
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-6)

@@ -1,4 +1,5 @@
-"""repro.serve: paged cache invariants, scheduler, ragged kernel, engine e2e."""
+"""repro.serve: paged cache invariants, scheduler, ragged kernel, engine
+e2e, and the speculative propose/verify/commit loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -70,6 +71,50 @@ def test_paged_cache_page_math():
     assert cache.pages_for(17) == 2
     with pytest.raises(ValueError):      # max_seq must align to pages
         serve.PagedKVCache(CFG, n_slots=2, max_seq=60, page_size=16)
+
+
+def test_paged_cache_invariants_raise_runtime_error():
+    """check_invariants must survive ``python -O``: RuntimeError, not
+    assert.  Corrupt the pool by hand and expect each violation named."""
+    cache = serve.PagedKVCache(CFG, n_slots=2, max_seq=32, page_size=8)
+    assert cache.admit(0, 10)
+    cache.check_invariants()
+    page = cache._owned[0][0]
+    cache._free.append(page)                       # page both owned+free
+    with pytest.raises(RuntimeError, match="owned and free"):
+        cache.check_invariants()
+    cache._free.remove(page)
+    cache._free.pop()                              # leaked page
+    with pytest.raises(RuntimeError, match="leaked page"):
+        cache.check_invariants()
+
+
+def test_paged_cache_truncate_bookkeeping():
+    """Speculative windows write ahead (note_write) and commit back
+    (truncate); the watermarks respect committed <= written <= capacity."""
+    cache = serve.PagedKVCache(CFG, n_slots=2, max_seq=32, page_size=8)
+    assert cache.admit(0, 12)                      # 2 pages = 16 capacity
+    assert cache.capacity(0) == 16
+    cache.note_write(0, 4)                         # prefill chunk
+    cache.truncate(0, 4)
+    assert cache.slot_length(0) == 4
+    cache.note_write(0, 9)                         # window: 1 + 4 drafts
+    cache.truncate(0, 6)                           # 1 accepted + committed
+    assert cache.slot_length(0) == 6
+    cache.check_invariants()
+    with pytest.raises(RuntimeError, match="roll back"):
+        cache.truncate(0, 5)                       # committed never shrinks
+    with pytest.raises(RuntimeError, match="beyond written"):
+        cache.truncate(0, 7)                       # nothing written there
+    with pytest.raises(RuntimeError, match="exceeds reserved capacity"):
+        cache.note_write(0, 17)                    # past the reservation
+    cache._written[0] = 17                         # corrupt: past capacity
+    with pytest.raises(RuntimeError, match="length invariant"):
+        cache.check_invariants()
+    cache._written[0] = 6
+    cache.retire(0)
+    assert cache.slot_length(0) == 0
+    cache.check_invariants()
 
 
 # --------------------------------------------------------------------------
@@ -213,6 +258,218 @@ def test_engine_token_identical_on_mixed_workload(params):
     assert s["prefill_tokens_fed"] == sum(len(p) for p in prompts)
     assert sum(eng.stats.slot_decode_tokens) + s["requests"] \
         == s["new_tokens"]
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: proposer, window planning, verify/commit
+# --------------------------------------------------------------------------
+
+def test_ngram_proposer_prompt_lookup():
+    p = serve.NGramProposer(max_ngram=3)
+    # suffix [4, 5] recurs earlier; continuation follows the occurrence
+    assert p.propose([1, 4, 5, 6, 7, 4, 5], 3) == [6, 7, 4]
+    assert p.propose([1, 4, 5, 6, 7, 4, 5], 1) == [6]
+    # the MOST RECENT earlier occurrence wins (7 follows the later [2])
+    assert p.propose([2, 3, 2, 7, 2], 1) == [7]
+    # no recurring suffix -> no guess; short/empty contexts -> no guess
+    assert p.propose([1, 2, 3, 4], 2) == []
+    assert p.propose([5], 2) == []
+    assert p.propose([1, 1, 1], 0) == []
+    with pytest.raises(ValueError):
+        serve.NGramProposer(max_ngram=0)
+    with pytest.raises(NotImplementedError):
+        serve.DraftModelProposer()
+
+
+class _FixedProposer:
+    """Always proposes the same tokens (test double)."""
+
+    def __init__(self, tokens):
+        self.tokens = list(tokens)
+        self.calls = []
+
+    def propose(self, context, k):
+        self.calls.append((list(context), k))
+        return self.tokens[:k]
+
+
+def test_scheduler_spec_window_plan_and_commit():
+    """A decoding slot contributes 1 + k tokens; commit keeps the accepted
+    prefix + the corrected token and truncates the cache length back."""
+    from repro.serve.scheduler import DECODE
+    cache = serve.PagedKVCache(CFG, n_slots=2, max_seq=64, page_size=8)
+    prop = _FixedProposer([50, 51, 52])
+    sched = serve.Scheduler(cache, chunk_size=8, spec_tokens=3,
+                            proposer=prop)
+    sched.submit(serve.Request(0, [1, 2, 3], max_new=8))
+    sched.admit()
+    plan = sched.plan()                      # prefill: no speculation
+    assert plan.n_draft == 0
+    sched.commit(plan, [9, 0])
+    assert sched.slots[0].out == [9]
+
+    plan = sched.plan()                      # decode window: 1 + 3 drafts
+    assert plan.kinds[0] == DECODE
+    assert plan.valid[0] == 4 and plan.draft_len[0] == 3
+    assert list(plan.tokens[0, :4]) == [9, 50, 51, 52]
+    assert list(plan.draft[0]) == [50, 51, 52]
+    # window positions 0..3 are the sampled rows
+    assert list(plan.logit_idx[0]) == [0, 1, 2, 3]
+    # proposer saw the full committed context
+    assert prop.calls[-1] == ([1, 2, 3, 9], 3)
+    assert cache._written[0] == 3 + 4        # prompt + window written
+
+    # verifier accepted 2 of 3 drafts + corrected token 60
+    out = sched.commit(plan, [60, 0], accept=[2, 0])
+    assert sched.slots[0].out == [9, 50, 51, 60]
+    assert sched.slots[0].length == 3 + 1 + 2  # prompt + committed + accepted
+    assert cache.slot_length(0) == sched.slots[0].length  # truncated back
+    assert out.emitted == [(0, 3)]
+
+    # window is capped so the request can never exceed max_new: 4 emitted,
+    # 4 remain -> k <= remaining - 1 = 3; emit all -> finished exactly at 8
+    plan = sched.plan()
+    assert plan.draft_len[0] == 3
+    out = sched.commit(plan, [61, 0], accept=[3, 0])
+    assert out.finished and len(out.finished[0][1].out) == 8
+    cache.check_invariants()
+
+
+def test_scheduler_spec_budget_caps_drafts():
+    """Draft tokens compete for the same max_batched_tokens budget as
+    prefill chunks: each decode slot's committed token is funded first,
+    drafts only from the remainder."""
+    cache = serve.PagedKVCache(CFG, n_slots=2, max_seq=64, page_size=8)
+    prop = _FixedProposer([50, 51, 52])
+    sched = serve.Scheduler(cache, chunk_size=8, max_batched_tokens=3,
+                            spec_tokens=3, proposer=prop)
+    for rid in (0, 1):
+        sched.submit(serve.Request(rid, [1, 2], max_new=6))
+    sched.admit()
+    while any(s is not None and s.prefilling for s in sched.slots):
+        plan = sched.plan()
+        assert plan.n_tokens <= 3            # budget holds on every step
+        sched.commit(plan, [9, 9])
+    plan = sched.plan()                      # both decoding: 2 committed
+    assert plan.n_tokens <= 3                # tokens + at most 1 draft
+    assert plan.n_draft <= 1
+    # the window (spec_tokens + the committed token) must fit the chunk
+    with pytest.raises(ValueError, match="speculative window"):
+        serve.Scheduler(cache, chunk_size=3, spec_tokens=3, proposer=prop)
+
+
+def test_engine_rejects_proposer_without_spec_tokens(params):
+    """A proposer with spec_tokens=0 would silently never be consulted —
+    the engine refuses the misconfiguration instead."""
+    with pytest.raises(ValueError, match="spec_tokens"):
+        serve.ServeEngine(CFG, params, n_slots=2, max_seq=32, page_size=8,
+                          proposer=serve.NGramProposer())
+
+
+def test_rejection_sample_greedy_exact():
+    """Greedy verification accepts exactly the argmax-matching prefix and
+    corrects with the argmax — window semantics, fp32 over bf16 logits."""
+    v = 16
+    logits = np.full((3, 4, v), -5.0, np.float32)
+    argmax = [[3, 5, 7, 9], [3, 5, 7, 9], [3, 5, 7, 9]]
+    for b in range(3):
+        for w, t in enumerate(argmax[b]):
+            logits[b, w, t] = 5.0
+    draft = np.array([
+        [3, 5, 7],      # all match rows 0..2 -> accept 3, bonus = row 3
+        [3, 2, 7],      # row-1 mismatch -> accept 1, correct = argmax row 1
+        [0, 0, 0]],     # draft_len 0 -> plain sample from row 0
+        np.int32)
+    draft_len = np.array([3, 3, 0], np.int32)
+    accept, token = serve.rejection_sample(
+        jnp.asarray(logits, jnp.bfloat16), jnp.asarray(draft),
+        jnp.asarray(draft_len), jax.random.key(0), serve.SamplingParams())
+    assert list(np.asarray(accept)) == [3, 1, 0]
+    assert list(np.asarray(token)) == [9, 5, 3]
+
+
+def test_spec_engine_greedy_token_identical_mixed_workload(params):
+    """ACCEPTANCE: the greedy speculative engine is token-identical to the
+    non-speculative engine on a ragged mixed prefill+decode workload —
+    speculation changes step count, never output."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, CFG.vocab_size, n).tolist()
+               for n in (3, 40, 5, 28, 4, 17)]
+
+    def run(spec_tokens):
+        eng = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                                page_size=8, chunk_size=8,
+                                spec_tokens=spec_tokens)
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        toks = [r.tokens for r in eng.drain()]
+        eng.cache.check_invariants()
+        assert eng.cache.used_pages == 0
+        return toks, eng.stats.summary()
+
+    base, sb = run(0)
+    spec, ss = run(3)
+    assert spec == base
+    assert sb["spec_proposed"] == 0.0        # spec_tokens=0 never proposes
+    assert ss["new_tokens"] == sb["new_tokens"]
+    assert ss["spec_accepted"] <= ss["spec_proposed"]
+    assert 0.0 <= ss["spec_accept_rate"] <= 1.0
+
+
+def test_spec_engine_repeat_workload_fewer_steps(params):
+    """ACCEPTANCE: on a repeat-heavy workload the n-gram proposer cuts
+    engine steps per generated token by >= 1.5x, with the acceptance rate
+    and tokens-per-step surfaced in EngineStats."""
+    # zeroing every block makes the residual stream exactly the last
+    # token's embedding, so greedy decode repeats it forever — the
+    # deterministic best case for prompt-lookup proposals
+    rep = dict(params)
+    rep["scan"] = jax.tree.map(jnp.zeros_like, params["scan"])
+    prompt = [7, 8, 9] * 4
+
+    def run(spec_tokens):
+        eng = serve.ServeEngine(CFG, rep, n_slots=2, max_seq=128,
+                                page_size=8, chunk_size=8,
+                                spec_tokens=spec_tokens)
+        eng.submit(prompt, max_new=32)
+        toks = eng.drain()[0].tokens
+        return toks, eng.stats.summary()
+
+    t0, s0 = run(0)
+    t1, s1 = run(3)
+    assert t1 == t0                                  # still greedy-exact
+    steps_per_tok0 = s0["steps"] / s0["new_tokens"]
+    steps_per_tok1 = s1["steps"] / s1["new_tokens"]
+    assert steps_per_tok0 / steps_per_tok1 >= 1.5
+    assert s1["spec_accept_rate"] >= 0.8             # near-perfect lookup
+    assert s1["tokens_per_step"] > s0["tokens_per_step"]
+    # per-request accounting flows to RequestMetrics too
+    eng = serve.ServeEngine(CFG, rep, n_slots=1, max_seq=128, page_size=8,
+                            chunk_size=8, spec_tokens=3)
+    eng.submit(prompt, max_new=16)
+    rm = eng.drain()[0].metrics
+    assert rm.proposed_tokens > 0
+    assert rm.acceptance_rate is not None and rm.acceptance_rate >= 0.8
+
+
+def test_spec_engine_use_kernel_token_identical(params):
+    """The speculative window rides the C>1 paged-attention kernel: with
+    use_kernel=True the spec engine still matches the non-spec kernel
+    engine token-for-token (the window's extra masked positions cannot
+    perturb earlier rows' streaming softmax)."""
+    prompts = ragged_prompts(5, seed=2, lo=3, hi=12)
+
+    def run(spec_tokens):
+        eng = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                                page_size=8, chunk_size=8, use_kernel=True,
+                                spec_tokens=spec_tokens)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        toks = [r.tokens for r in eng.drain()]
+        eng.cache.check_invariants()
+        return toks
+
+    assert run(3) == run(0)
 
 
 # --------------------------------------------------------------------------
