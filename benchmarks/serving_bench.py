@@ -19,6 +19,15 @@ mode, so its *wall-clock* rows are not meaningful there — the
 bytes touched per decode token, the quantity the decode hot path is
 actually bound by.
 
+The ``serving_*_kv{bf16,i8,f8}`` rows sweep the KV-cache storage format
+(``repro.quant``): tok/s per format over an identical workload, and —
+the trajectory metric — ``serving_hbm_bytes_decode_kv*``, the estimated
+HBM bytes the paged kernel streams per decode token under each format
+(quantized pools read at 1 byte/element plus the fp32 scale sidecar,
+which is why the i8 row sits at ~0.51x of bf16 instead of exactly 0.5x).
+Off-TPU the wall-clock rows run the gather fallback (the kernel
+interprets); the bytes rows carry the comparison.
+
 The ``serving_spec_*`` rows measure speculative decoding with the n-gram
 prompt-lookup proposer on a repeat-heavy workload (greedy, so the
 speculative engine is token-identical to the baseline by construction):
@@ -27,6 +36,11 @@ speculative engine is token-identical to the baseline by construction):
 ratio in the derived column — the headline: how many engine ticks each
 generated token costs), plus a ``serving_tok_spec_{base,spec}`` tok/s
 pair over the identical workload.
+
+Row names are pinned by :func:`expected_row_names` — ``run()`` refuses
+to return a row set that drifted from it, and the fast schema test in
+``tests/test_quant.py`` pins the trajectory-critical names, so a rename
+cannot silently break the CI artifact consumers.
 
 Standalone run (used by CI to archive the trajectory)::
 
@@ -53,6 +67,48 @@ SPEC_TOKENS = 3
 SPEC_SLOTS = 2
 SPEC_REQUESTS = 6
 SPEC_MAX_NEW = 32
+
+# KV-dtype cell: (row label, repro.quant format name).  The f8 row uses
+# e4m3; e3m4's bytes are identical (both 1 byte/elem + the same sidecar).
+KV_CELL = (("bf16", "bf16"), ("i8", "i8"), ("f8", "f8_e4m3"))
+
+
+def expected_row_names() -> list:
+    """Every row ``run()`` emits, in order — the CI artifact schema.
+
+    CI uploads the ``--json`` rows as the serving trajectory; downstream
+    comparisons key on these names, so ``run()`` validates its output
+    against this list and the fast test in tests/test_quant.py pins the
+    trajectory-critical entries.
+    """
+    names = []
+    for slots in SLOT_COUNTS:
+        names += [f"serving_tok_{slots}slots", f"serving_ttft_{slots}slots",
+                  f"serving_itl_p95_{slots}slots"]
+    for label in ("gather", "paged"):
+        names += [f"serving_tok_{CMP_SLOTS}slots_{label}",
+                  f"serving_itl_p95_{CMP_SLOTS}slots_{label}"]
+    names += ["serving_hbm_bytes_decode_gather",
+              "serving_hbm_bytes_decode_paged"]
+    names += [f"serving_tok_kv{label}" for label, _ in KV_CELL]
+    names += [f"serving_hbm_bytes_decode_kv{label}" for label, _ in KV_CELL]
+    names += ["serving_tok_spec_base", "serving_tok_spec_spec",
+              "serving_spec_accept_rate", "serving_spec_tokens_per_step"]
+    return names
+
+
+def check_rows(rows) -> None:
+    """Raise if the emitted row names drifted from the pinned schema."""
+    got = [name for name, _, _ in rows]
+    want = expected_row_names()
+    if got != want:
+        missing = [n for n in want if n not in got]
+        extra = [n for n in got if n not in want]
+        raise RuntimeError(
+            "serving_bench rows drifted from expected_row_names() — "
+            "update the schema (and the pinned names in "
+            f"tests/test_quant.py) deliberately; missing={missing} "
+            f"extra={extra}")
 
 
 def _bench_cfg():
@@ -83,6 +139,26 @@ def _hbm_bytes_per_decode_token(cfg, slots: int, max_seq: int,
     gather = cfg.n_layers * 3 * slots * max_seq * kv_bytes / slots
     paged = cfg.n_layers * slots * page_tokens * kv_bytes / slots
     return gather, paged
+
+
+def _hbm_bytes_per_decode_token_kv(cfg, mean_len: float, page_size: int,
+                                   fmt) -> float:
+    """Estimated HBM bytes the *paged kernel* streams per decode token
+    under KV format ``fmt`` (``repro.quant.KVFormat``).
+
+    Reuses the paged-path accounting of
+    :func:`_hbm_bytes_per_decode_token` (so the two row families can
+    never desynchronize) at the format's native itemsize, plus — for
+    quantized formats — the fp32 scale sidecar (2 scales per page per
+    kv head, K and V).  The sidecar is why i8 lands at ~0.51x of bf16
+    rather than exactly 0.5x.
+    """
+    _, paged = _hbm_bytes_per_decode_token(cfg, 1, 0, mean_len, page_size,
+                                           itemsize=fmt.itemsize)
+    if fmt.quantized:
+        pages = -(-mean_len // page_size)
+        paged += cfg.n_layers * pages * cfg.n_kv_heads * 4 * 2
+    return paged
 
 
 def _drive(engine, prompts, max_new):
@@ -156,6 +232,32 @@ def run() -> list[tuple[str, float, str]]:
                  f"allocated pages only mean_len={mean_len:.0f} "
                  f"page={CMP_PAGE} ({gb / pb:.1f}x less than gather)"))
 
+    # -- KV-dtype sweep: quantized page pools, identical workload -----------
+    # wall-clock rows run the gather fallback off-TPU (the kernel
+    # interprets there); the serving_hbm_bytes_decode_kv* rows carry the
+    # comparison — bytes the paged kernel streams per decode token
+    from repro import quant
+    kv_hbm = {}
+    for label, fmt_name in KV_CELL:
+        fmt = quant.resolve(fmt_name)
+        engine = serve.ServeEngine(
+            cfg, params, n_slots=CMP_SLOTS, max_seq=CMP_MAX_SEQ,
+            page_size=CMP_PAGE, chunk_size=16, use_kernel=on_tpu,
+            kv_dtype=fmt)
+        s = _drive(engine, cmp_prompts, CMP_MAX_NEW)
+        rows.append((
+            f"serving_tok_kv{label}", 1e6 / max(s["tok_per_s"], 1e-9),
+            f"tok_s={s['tok_per_s']:.0f} fmt={fmt.name}"
+            f"{'' if on_tpu else ' (gather fallback wall-clock)'}"))
+        kv_hbm[label] = _hbm_bytes_per_decode_token_kv(
+            cfg, mean_len, CMP_PAGE, fmt)
+    for label, fmt_name in KV_CELL:
+        ratio = kv_hbm[label] / kv_hbm["bf16"]
+        rows.append((
+            f"serving_hbm_bytes_decode_kv{label}", kv_hbm[label],
+            f"paged-kernel bytes/decode-token fmt={fmt_name} "
+            f"({ratio:.2f}x of bf16, incl. scale sidecar)"))
+
     # -- speculative decode vs baseline, repeat-heavy workload --------------
     # the bench model's random weights generate pattern-free text that an
     # n-gram proposer can't guess, so the speculative cell runs a
@@ -191,6 +293,7 @@ def run() -> list[tuple[str, float, str]]:
         "serving_spec_tokens_per_step", ss["tokens_per_step"],
         f"base={sb['tokens_per_step']:.2f} "
         f"({steps_ratio:.1f}x fewer steps/token)"))
+    check_rows(rows)     # the CI artifact schema is pinned — fail loudly
     return rows
 
 

@@ -61,8 +61,22 @@ step (page_size 16 alone underfills the 128-lane MXU contraction dim).
 On TPU this is the hot path; off-TPU it runs in (slow) interpret mode, so
 the flag is off by default here.
 
+**Quantized serving** (``--kv-dtype i8`` / ``f8_e4m3`` / ``f8_e3m4``):
+the KV page pools store sub-bf16 values with one fp32 amax scale per
+(page, kv-head) in a small sidecar pool (``repro.quant``).  Every chunk's
+K/V is quantized as it is written (the touched pages requantize against
+a fresh amax); on read the paged-attention kernel multiplies the scales
+back onto K/V blocks in VMEM right before the score/output matmuls, so
+decode — which PR 3 made HBM-bound on KV page reads — streams the cache
+at 1 byte/element and never materializes a dense bf16 view of it.  This
+is the MPX move applied to inference: the cache's precision is a policy
+component (``Policy.parse("p=f32,c=bf16,o=bf16,kv=i8")`` round-trips to
+the same engine configuration), not a property of the arrays.  Greedy
+outputs may differ from the bf16 baseline in near-tie tokens; logits
+stay within the tolerance pinned by tests/test_serve.py.
+
 Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4 \
-         --spec-tokens 3
+         --spec-tokens 3 --kv-dtype i8
 """
 import argparse
 
@@ -107,6 +121,11 @@ def main():
     ap.add_argument("--pages-per-block", type=int, default=1,
                     help="logical pages per kernel K-block (fill the MXU "
                          "lane dim; only meaningful with --use-kernel)")
+    ap.add_argument("--kv-dtype", type=str, default="bf16",
+                    choices=["bf16", "i8", "f8_e4m3", "f8_e3m4"],
+                    help="KV-cache page storage format: bf16 passthrough "
+                         "or quantized with per-page amax scales "
+                         "(repro.quant; dequantized inside the kernel)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -121,6 +140,7 @@ def main():
         max_batched_tokens=args.max_batched_tokens,
         spec_tokens=args.spec_tokens,
         use_kernel=args.use_kernel, pages_per_block=args.pages_per_block,
+        kv_dtype=args.kv_dtype,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p))
 

@@ -1,22 +1,28 @@
 """Precision policies (JMP-style), the knob the framework layers consume.
 
-A :class:`Policy` names three dtypes:
+A :class:`Policy` names three dtypes and one serving-side storage format:
 
 - ``param_dtype``   — storage dtype of the master parameters (fp32 in mixed
   precision training; the optimizer always updates these),
 - ``compute_dtype`` — dtype the forward/backward pass runs in,
-- ``output_dtype``  — dtype activations/losses are returned in.
+- ``output_dtype``  — dtype activations/losses are returned in,
+- ``kv_dtype``      — storage format of the serving KV-cache pages
+  (``repro.quant`` format name: "bf16" passthrough, "i8", "f8_e4m3",
+  "f8_e3m4").  Inference-side only; training never consults it.
 
 ``Policy.cast_to_compute(tree)`` etc. apply :func:`repro.core.casting.cast_tree`.
 Policies parse from compact strings, e.g.::
 
     Policy.parse("params=float32,compute=bfloat16,output=float32")
     Policy.parse("p=f32,c=bf16,o=f32")          # aliases
+    Policy.parse("p=f32,c=bf16,o=bf16,kv=i8")   # int8 serving KV cache
     Policy.parse("f32")                          # uniform full precision
 
 The framework default for the TPU target is ``MIXED_BF16``; ``MIXED_F16``
 reproduces the paper's GPU configuration (and is what turns dynamic loss
-scaling from a safety net into a necessity).
+scaling from a safety net into a necessity).  The ``kv=`` component is
+what ``ServeEngine(kv_dtype=...)`` consumes — precision as a policy
+threaded through the pipeline, training and serving alike.
 """
 from __future__ import annotations
 
@@ -37,6 +43,7 @@ _FIELD_ALIASES = {
     "p": "param_dtype", "params": "param_dtype", "param": "param_dtype",
     "c": "compute_dtype", "compute": "compute_dtype",
     "o": "output_dtype", "output": "output_dtype",
+    "kv": "kv_dtype", "kv_cache": "kv_dtype",
 }
 
 
@@ -45,6 +52,10 @@ class Policy:
     param_dtype: object = jnp.float32
     compute_dtype: object = jnp.bfloat16
     output_dtype: object = jnp.float32
+    #: serving KV-cache storage format (canonical ``repro.quant`` name);
+    #: a string, not a jnp dtype — "i8"/"f8_*" name value grids + scale
+    #: sidecars, not bare array dtypes.
+    kv_dtype: str = "bf16"
 
     # -- casting helpers ---------------------------------------------------
     def cast_to_param(self, tree):
@@ -68,8 +79,11 @@ class Policy:
 
     def __str__(self) -> str:
         n = lambda d: jnp.dtype(d).name
-        return (f"params={n(self.param_dtype)},compute={n(self.compute_dtype)},"
-                f"output={n(self.output_dtype)}")
+        s = (f"params={n(self.param_dtype)},compute={n(self.compute_dtype)},"
+             f"output={n(self.output_dtype)}")
+        if self.kv_dtype != "bf16":     # baseline kv is implicit, so every
+            s += f",kv={self.kv_dtype}"  # pre-quant policy string round-trips
+        return s
 
     # -- parsing -----------------------------------------------------------
     @classmethod
@@ -86,7 +100,13 @@ class Policy:
         for part in spec.split(","):
             key, _, val = part.partition("=")
             field = _FIELD_ALIASES[key.strip()]
-            kwargs[field] = _DTYPE_ALIASES[val.strip()]
+            if field == "kv_dtype":
+                # kv= names a quant FORMAT (value grid + scale sidecar),
+                # not a bare dtype — "i8", "f8_e4m3", "f8_e3m4", "bf16"
+                from repro.quant.formats import canonical_name
+                kwargs[field] = canonical_name(val.strip())
+            else:
+                kwargs[field] = _DTYPE_ALIASES[val.strip()]
         return cls(**kwargs)
 
 

@@ -1,4 +1,5 @@
-"""Native paged-attention Pallas kernel: page-table-indexed KV streaming.
+"""Native paged-attention Pallas kernel: page-table-indexed KV streaming,
+with in-kernel dequantization of sub-bf16 (int8 / fp8) page pools.
 
 The serving hot path is HBM-bandwidth-bound, and the paged KV layout
 (``repro.serve.cache``) stores every slot's cache as fixed-size pages of a
@@ -10,10 +11,27 @@ walks each slot's page table directly: the page table and per-slot chunk
 ``start``/``valid`` counts are scalar-prefetch (SMEM) operands, and the
 K/V block index maps resolve logical page ``i`` -> physical page
 ``table[b, i]`` in the pool, so the DMA engine streams exactly the pages
-the scheduler allocated, in bf16, exactly once.  Pages past a slot's
-length re-issue the previous block index (the pipeline elides the
-refetch) and their compute is predicated off — unallocated pages are
-never read.
+the scheduler allocated, exactly once.  Pages past a slot's length
+re-issue the previous block index (the pipeline elides the refetch) and
+their compute is predicated off — unallocated pages are never read.
+
+Quantized pools (``repro.quant``) add two more *blocked* operands: the
+``(P, K)`` fp32 amax-scale sidecars for K and V.  Each sub-page's scale
+is a ``(1, 1)`` block whose index map resolves the SAME logical page ->
+physical page mapping as that sub-page's value block (one shared
+``_phys_page`` helper, so the value and its scale can never point at
+different pages), and each K/V block is dequantized *in VMEM* —
+``block.astype(f32) * scale``, cast to the query dtype — before the
+score/output matmuls.  The pool is streamed at 1 byte/element and the
+dense bf16 view of the cache never exists anywhere: not in HBM (the
+gather copy PR 3 removed) and not as a pool-shaped intermediate
+(dequant happens block-by-block in registers).  The sidecars ride
+blocked VMEM rather than scalar-prefetch SMEM deliberately: SMEM is a
+few KB per core and the sidecar grows with the *pool* (``P * K`` fp32
+each), so a production-sized pool would blow the scalar-prefetch budget
+— only the O(B * Pmax) page table and the (B,) start/valid vectors
+belong there.  Sidecar HBM cost stays ~``page_size * head_dim / 2``
+times below the pools it describes.
 
 Queries cover every ``serve_forward`` step shape, not just single-token
 decode: q is ``(B, C, H, D)`` where ``C = 1`` is decode and ``C > 1`` a
@@ -30,6 +48,8 @@ index map — pages are not physically contiguous, so one block per page is
 DMA'd and they meet in VMEM) into a single ``(ppb * page_size, D)``
 operand for the score matmul.  With page_size 16 a single page underfills
 the MXU's 128-lane contraction dim; ``pages_per_block = 8`` fills it.
+Each sub-page block is dequantized with its *own* page's scale before the
+concatenation.
 
 Grid: ``(B*K, ceil(Pmax / pages_per_block))`` — logical page blocks
 innermost so the fp32 state is carried across one slot's pages, then
@@ -48,13 +68,34 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, *refs,
+def _phys_page(table_ref, start_ref, valid_ref, b, logical, *,
+               page_size: int, n_pages: int):
+    """Logical page of slot ``b`` -> clamped physical pool page.
+
+    THE logical->physical rule, shared by the K/V value block index maps
+    and the scale block index maps (a value and its scale must always
+    resolve to the same page): pages past the slot's last used page
+    re-issue the last used index, the sentinel is clamped into range —
+    compute for either case is predicated off by the kernel body.
+    """
+    n_pg = pl.cdiv(start_ref[b] + valid_ref[b], page_size)
+    i_eff = jnp.minimum(logical, jnp.maximum(n_pg - 1, 0))
+    return jnp.minimum(table_ref[b, i_eff], n_pages - 1)
+
+
+def _paged_kernel(table_ref, start_ref, valid_ref, *refs,
                   page_size: int, scale: float, n_kv: int, group: int,
-                  ppb: int):
-    k_refs = refs[:ppb]
-    v_refs = refs[ppb:2 * ppb]
-    o_ref = refs[2 * ppb]
-    m_scr, l_scr, acc_scr = refs[2 * ppb + 1:]
+                  ppb: int, quantized: bool):
+    q_ref = refs[0]
+    k_refs = refs[1:1 + ppb]
+    v_refs = refs[1 + ppb:1 + 2 * ppb]
+    refs = refs[1 + 2 * ppb:]
+    if quantized:
+        ks_refs = refs[:ppb]                  # (1, 1) scale per sub-page
+        vs_refs = refs[ppb:2 * ppb]
+        refs = refs[2 * ppb:]
+    o_ref = refs[0]
+    m_scr, l_scr, acc_scr = refs[1:]
     i = pl.program_id(1)
     n_i = pl.num_programs(1)
     b = pl.program_id(0) // n_kv
@@ -69,17 +110,31 @@ def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, *refs,
     length = start + valid_ref[b]        # cached tokens incl. this chunk
     block_lo = i * ppb * page_size
 
+    def _block(refs_j, scale_ref_j):
+        """One sub-page's (page_size, D) block, dequantized in VMEM with
+        its own page's (1, 1) sidecar scale block (same index map)."""
+        blk = refs_j[...]
+        if not quantized:
+            return blk
+        return (blk.astype(jnp.float32) *
+                scale_ref_j[0, 0]).astype(q_ref.dtype)
+
     @pl.when(block_lo < length)
     def _body():
         q = q_ref[...]                                    # (C*G, D) bf16
         if ppb == 1:
-            k = k_refs[0][...]
-            v = v_refs[0][...]
+            k = _block(k_refs[0], ks_refs[0] if quantized else None)
+            v = _block(v_refs[0], vs_refs[0] if quantized else None)
         else:
             # ppb logical pages, each DMA'd from its own physical page,
-            # concatenated in VMEM into one (ppb*ps, D) matmul operand
-            k = jnp.concatenate([r[...] for r in k_refs], axis=0)
-            v = jnp.concatenate([r[...] for r in v_refs], axis=0)
+            # dequantized with its own scale, concatenated in VMEM into
+            # one (ppb*ps, D) matmul operand
+            k = jnp.concatenate(
+                [_block(r, ks_refs[j] if quantized else None)
+                 for j, r in enumerate(k_refs)], axis=0)
+            v = jnp.concatenate(
+                [_block(r, vs_refs[j] if quantized else None)
+                 for j, r in enumerate(v_refs)], axis=0)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (C*G, ppb*ps) f32
@@ -112,16 +167,28 @@ def _paged_kernel(table_ref, start_ref, valid_ref, q_ref, *refs,
 
 
 def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
+                    k_scales=None, v_scales=None,
                     pages_per_block: int = 1, interpret: bool = False):
     """Paged attention over a shared KV page pool, no gathered copy.
 
     q (B, C, H, D) — one serving chunk per slot (C = 1 decode, C > 1
     prefill / speculative window / mixed); k_pages / v_pages
     (P, page_size, K, D) — the shared pools, chunk K/V already scattered
-    in (``paged_write`` runs first); page_table (B, Pmax) int32
-    logical->physical map whose unallocated entries hold the sentinel
-    ``P``; start (B,) absolute position of each slot's chunk; valid (B,)
-    real tokens in the chunk (0 = idle slot).
+    in (``paged_write`` / ``quantized_pool_write`` runs first);
+    page_table (B, Pmax) int32 logical->physical map whose unallocated
+    entries hold the sentinel ``P``; start (B,) absolute position of
+    each slot's chunk; valid (B,) real tokens in the chunk (0 = idle
+    slot).
+
+    ``k_scales`` / ``v_scales`` (P, K) fp32 enable the quantized path:
+    the pools hold int8 or fp8 (``repro.quant`` formats) and every K/V
+    block is dequantized in VMEM — ``block * scales[phys, kv_head]`` —
+    before its matmul.  Both must be given together; without them the
+    pools are attended to as-is (the bf16 baseline).  Each sub-page's
+    scale arrives as its own (1, 1) block through the same
+    logical->physical index map as the sub-page's values (blocked VMEM,
+    not scalar-prefetch SMEM — the sidecar scales with the pool and
+    would not fit the SMEM budget at production pool sizes).
 
     Query ``ci`` of slot ``b`` attends causally to cache positions
     ``<= start[b] + ci``; padding positions (``ci >= valid[b]``) and idle
@@ -137,6 +204,9 @@ def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
         raise ValueError(f"n_kv_heads {kv} must divide n_heads {h}")
     if pages_per_block < 1:
         raise ValueError(f"pages_per_block must be >= 1: {pages_per_block}")
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be given together")
+    quantized = k_scales is not None
     group = h // kv
     cg = c * group
     scale = 1.0 / math.sqrt(d)
@@ -150,28 +220,43 @@ def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
     valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1), (b,))
 
-    def page_index(j):
-        # logical page i*ppb + j of slot b -> physical pool page.  Blocks
-        # past the slot's last used page re-issue the last used index (no
-        # refetch, compute predicated off); the sentinel (= n_pages) only
+    def sub_page_phys(bk, i, j, table_ref, start_ref, valid_ref):
+        # logical page i*ppb + j of slot bk//kv -> physical pool page,
+        # via the ONE shared rule (_phys_page).  Blocks past the slot's
+        # last used page re-issue the last used index (no refetch,
+        # compute predicated off); the sentinel (= n_pages) only
         # survives for idle slots, clamped into range with compute
         # predicated off.
-        def index_map(bk, i, table_ref, start_ref, valid_ref):
-            bb = bk // kv
-            n_pg = pl.cdiv(start_ref[bb] + valid_ref[bb], page_size)
-            i_eff = jnp.minimum(i * ppb + j, jnp.maximum(n_pg - 1, 0))
-            phys = jnp.minimum(table_ref[bb, i_eff], n_pages - 1)
+        return _phys_page(table_ref, start_ref, valid_ref, bk // kv,
+                          i * ppb + j, page_size=page_size,
+                          n_pages=n_pages)
+
+    def page_index(j):
+        def index_map(bk, i, *scalar_refs):
+            phys = sub_page_phys(bk, i, j, *scalar_refs)
             return (phys, 0, bk % kv, 0)
+        return index_map
+
+    def scale_index(j):
+        def index_map(bk, i, *scalar_refs):
+            phys = sub_page_phys(bk, i, j, *scalar_refs)
+            return (phys, bk % kv)
         return index_map
 
     kv_specs = [pl.BlockSpec((None, page_size, None, d), page_index(j))
                 for j in range(ppb)]
+    sc_specs = [pl.BlockSpec((1, 1), scale_index(j)) for j in range(ppb)]
+    inputs = [qf] + [k_pages] * ppb + [v_pages] * ppb
+    in_specs = ([pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0))]
+                + kv_specs + kv_specs)
+    if quantized:
+        inputs += ([jnp.asarray(k_scales, jnp.float32)] * ppb
+                   + [jnp.asarray(v_scales, jnp.float32)] * ppb)
+        in_specs += sc_specs + sc_specs
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b * kv, -(-pmax // ppb)),
-        in_specs=(
-            [pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0))]
-            + kv_specs + kv_specs),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, cg, d), lambda bk, i, *_: (bk, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((cg, 1), jnp.float32),
@@ -181,11 +266,12 @@ def paged_attention(q, k_pages, v_pages, page_table, start, valid, *,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page_size=page_size, scale=scale,
-                          n_kv=kv, group=group, ppb=ppb),
+                          n_kv=kv, group=group, ppb=ppb,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kv, cg, d), q.dtype),
         interpret=interpret,
-    )(table, start, valid, qf, *([k_pages] * ppb), *([v_pages] * ppb))
+    )(table, start, valid, *inputs)
     return (out.reshape(b, kv, c, group, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, c, h, d))
 

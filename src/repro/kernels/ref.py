@@ -101,6 +101,26 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, start, valid
     return jnp.where(row_ok[:, :, None, None], out, 0).astype(q.dtype)
 
 
+def quantized_paged_attention_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                  page_table, start, valid) -> jnp.ndarray:
+    """Quantized ragged paged-attention oracle (``repro.quant`` pools).
+
+    ``k_pages`` / ``v_pages`` hold int8 or fp8 (bf16-emulated off-TPU)
+    values with ``(P, K)`` fp32 amax-scale sidecars ``k_scales`` /
+    ``v_scales`` — the write-quantize/read-dequantize serving layout.
+    Dequantizes each pool with the SAME per-element rule the kernel
+    applies per block in VMEM (``repro.quant.ops.dequantize``: fp32
+    multiply, cast to q.dtype) and defers to :func:`paged_attention_ref`,
+    so any kernel/oracle disagreement is attention math, never a dequant
+    discrepancy.  This is deliberately the dense gather-based layout the
+    kernel exists to avoid — ground truth only.
+    """
+    from repro.quant.ops import dequantize
+    k = dequantize(k_pages, k_scales[:, None, :, None], q.dtype)
+    v = dequantize(v_pages, v_scales[:, None, :, None], q.dtype)
+    return paged_attention_ref(q, k, v, page_table, start, valid)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jnp.ndarray:
     """(..., D) RMSNorm with fp32 statistics, output in x.dtype."""
     x32 = x.astype(jnp.float32)

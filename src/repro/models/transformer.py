@@ -332,18 +332,24 @@ def _require_paged_support(cfg: ModelConfig) -> None:
 
 
 def abstract_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                         dtype=jnp.bfloat16) -> PyTree:
+                         dtype=jnp.bfloat16,
+                         kv_format: str = "bf16") -> PyTree:
     """Paged K/V pool stand-ins mirroring the scan/tail parameter layout.
 
     One (n_pages, page_size, K, D) pool pair per attention layer; scan
     groups carry the usual stacked leading dim.  All layers share one page
     table (each has its own pool array), so the serve scheduler allocates
-    pages once per sequence.
+    pages once per sequence.  A quantized ``kv_format`` ("i8",
+    "f8_e4m3", "f8_e3m4" — see :mod:`repro.quant`) stores the pools in
+    the format's storage dtype and adds a (n_pages, K) fp32 amax-scale
+    sidecar pair per layer; ``dtype`` then only names the bf16
+    passthrough layout.
     """
     _require_paged_support(cfg)
     n_groups, rem = _layout(cfg)
     leaf = lambda: attention.paged_cache_spec(  # noqa: E731
-        n_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+        n_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+        kv_format=kv_format)
     cache: dict = {}
     if n_groups > 0:
         group = {f"b{i}": leaf() for i in range(len(cfg.pattern))}
@@ -354,22 +360,28 @@ def abstract_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     dtype=jnp.bfloat16) -> PyTree:
+                     dtype=jnp.bfloat16, kv_format: str = "bf16") -> PyTree:
+    # scale sidecars init to the quant SCALE_FLOOR via zeros -> floor is
+    # irrelevant: zero pages dequantize to zero under any scale, and the
+    # first write to a page installs a fresh amax scale
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        abstract_paged_cache(cfg, n_pages, page_size, dtype),
+                        abstract_paged_cache(cfg, n_pages, page_size, dtype,
+                                             kv_format=kv_format),
                         is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
 
 
 def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
                  page_table, x: jnp.ndarray, positions, valid, *,
-                 page_size: int, use_kernel: bool, pages_per_block: int = 1):
+                 page_size: int, use_kernel: bool, pages_per_block: int = 1,
+                 kv_format: str = "bf16"):
     h = apply_norm(cfg.norm, p["pre_norm"], x)
     y, pages = attention.paged_attend(
         p["attn"], pages, page_table, h, positions, valid,
         page_size=page_size, n_heads=cfg.n_heads,
         window=cfg.window if kind == "local_attn" else 0,
         cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        use_kernel=use_kernel, pages_per_block=pages_per_block)
+        use_kernel=use_kernel, pages_per_block=pages_per_block,
+        kv_format=kv_format)
     if cfg.post_norm:
         y = apply_norm(cfg.norm, p["post_mix_norm"], y)
     x = x + y
@@ -392,7 +404,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                   start: jnp.ndarray, valid: jnp.ndarray, *,
                   page_size: int, logit_idx: Optional[jnp.ndarray] = None,
                   use_kernel: bool = False, pages_per_block: int = 1,
-                  ) -> tuple[jnp.ndarray, PyTree]:
+                  kv_format: str = "bf16") -> tuple[jnp.ndarray, PyTree]:
     """Unified serving step over a paged KV cache.
 
     tokens (B, C) with per-slot chunk ``start`` positions (B,) and ``valid``
@@ -417,6 +429,14 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
     compiled program, no gathered dense copy of the cache;
     ``pages_per_block`` widens the kernel's K-blocks to span that many
     logical pages per grid step.
+
+    ``kv_format`` ("bf16" | "i8" | "f8_e4m3" | "f8_e3m4", see
+    :mod:`repro.quant`) must match the layout ``pages`` was built with
+    (:func:`init_paged_cache`): quantized formats write-quantize each
+    chunk's K/V into the pools (per-page/per-head amax scales in the
+    fp32 sidecars) and dequantize on read — inside the kernel's VMEM
+    blocks on the ``use_kernel`` path, so the sub-bf16 pool is the ONLY
+    HBM-resident image of the cache.
     """
     _require_paged_support(cfg)
     dtype = params["embed"][next(iter(params["embed"]))].dtype
@@ -434,7 +454,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                     cfg, kind, gparams[f"b{i}"], gpages[f"b{i}"],
                     page_table, x, positions, valid,
                     page_size=page_size, use_kernel=use_kernel,
-                    pages_per_block=pages_per_block)
+                    pages_per_block=pages_per_block, kv_format=kv_format)
             return x, new_gpages
 
         x, new_pages["scan"] = jax.lax.scan(
@@ -444,7 +464,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
             cfg, kind, params[f"tail{j}"], pages[f"tail{j}"],
             page_table, x, positions, valid,
             page_size=page_size, use_kernel=use_kernel,
-            pages_per_block=pages_per_block)
+            pages_per_block=pages_per_block, kv_format=kv_format)
 
     # gather the sampled window positions before the unembed so the (d, V)
     # projection runs over W positions per slot, not per padded chunk

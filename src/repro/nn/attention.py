@@ -311,13 +311,24 @@ def decode_step(params, cache, x, pos, *, n_heads: int, window: int,
 # read clamped garbage that is masked by position.  The fallback is the
 # numerics oracle and the non-TPU / windowed / softcapped path, not the
 # serving layout.
+#
+# Pools may store sub-bf16 (``kv_format`` in {"i8", "f8_e4m3",
+# "f8_e3m4"}, see ``repro.quant``): values live on the format's grid
+# with a (P, K) fp32 amax-scale sidecar per pool.  Writes quantize
+# (``quant.ops.quantized_pool_write`` requantizes exactly the touched
+# pages), the kernel dequantizes block-by-block in VMEM, and the gather
+# fallback dequantizes its dense view right after gathering.
 
 def paged_cache_spec(n_pages: int, page_size: int, n_kv_heads: int,
-                     head_dim: int, dtype) -> dict:
-    """Abstract paged K/V pool layout for one attention layer."""
-    shape = (n_pages, page_size, n_kv_heads, head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
-            "v": jax.ShapeDtypeStruct(shape, dtype)}
+                     head_dim: int, dtype, kv_format: str = "bf16") -> dict:
+    """Abstract paged K/V pool layout for one attention layer.
+
+    ``kv_format`` "bf16" is the passthrough {"k", "v"} pair in ``dtype``;
+    quantized formats add the {"k_scale", "v_scale"} fp32 sidecars and
+    store the pools in the format's storage dtype (``repro.quant``)."""
+    from repro.quant import formats as qfmt
+    return qfmt.pool_spec(n_pages, page_size, n_kv_heads, head_dim,
+                          kv_format, dtype=dtype)
 
 
 def paged_write(pages: jnp.ndarray, vals: jnp.ndarray,
@@ -354,11 +365,27 @@ def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     return g.reshape((b, pmax * ps) + g.shape[3:])
 
 
+def paged_gather_scales(scales: jnp.ndarray, page_table: jnp.ndarray,
+                        page_size: int) -> jnp.ndarray:
+    """(P, K) sidecar, (B, Pmax) -> per-position scales (B, Pmax*ps, K).
+
+    Companion to :func:`paged_gather` for quantized pools: every token of
+    a page shares its page's per-head scale, so the gathered scale is
+    broadcast over the ``page_size`` rows.  Fallback/oracle path only —
+    the kernel reads the (P, K) sidecar directly from SMEM.
+    """
+    g = scales[page_table]                                # (B, Pmax, K)
+    b, pmax, kv = g.shape
+    return jnp.broadcast_to(g[:, :, None, :],
+                            (b, pmax, page_size, kv)).reshape(
+                                b, pmax * page_size, kv)
+
+
 def paged_attend(params, pages: dict, page_table: jnp.ndarray,
                  x: jnp.ndarray, positions: jnp.ndarray, valid: jnp.ndarray,
                  *, page_size: int, n_heads: int, window: int, cap: float,
                  rope_theta: float, use_kernel: bool = False,
-                 pages_per_block: int = 1):
+                 pages_per_block: int = 1, kv_format: str = "bf16"):
     """Chunked-prefill / decode attention against a paged KV cache.
 
     x (B, C, d) with per-token absolute ``positions`` (B, C) and ``valid``
@@ -371,35 +398,65 @@ def paged_attend(params, pages: dict, page_table: jnp.ndarray,
     carry small valid and idle slots valid=0.  Returns
     (y (B, C, d), new ``pages`` dict).
 
+    ``kv_format`` selects the pool storage precision (``repro.quant``):
+    "bf16" writes/reads the pools as-is; "i8" / "f8_e4m3" / "f8_e3m4"
+    quantize the chunk's K/V on write (per-page/per-head amax scales in
+    the pool dict's ``k_scale`` / ``v_scale`` fp32 sidecars) and
+    dequantize on read — in VMEM inside the kernel, or on the gathered
+    view in the fallback.
+
     ``use_kernel=True`` runs the Pallas paged-attention kernel
     (:mod:`repro.kernels.paged_attention`) for full-attention layers: the
-    page table is a scalar-prefetch operand and the kernel's block index
+    page table is a scalar-prefetch operand (quantized scale sidecars
+    ride blocked VMEM through the same page index maps — they scale with
+    the pool, so SMEM is the wrong home) and the kernel's block index
     maps stream each slot's allocated pages directly from the shared
-    pool — the gathered contiguous (B, Pmax*page_size, K, D) copy is
-    never formed, for decode AND prefill chunks alike.
-    ``pages_per_block`` widens each kernel K-block to span that many
-    logical pages (page_size 16 alone underfills the 128-lane MXU dim).
-    Sliding-window (``window > 0``) and softcapped (``cap > 0``) layers,
-    and ``use_kernel=False``, take the pure-jnp gather fallback — the
-    numerics oracle, which runs everywhere.
+    pool — the gathered
+    contiguous (B, Pmax*page_size, K, D) copy is never formed, for
+    decode AND prefill chunks alike, and quantized pools are multiplied
+    back to the compute dtype block-by-block so no dense bf16 image of
+    the cache exists either.  ``pages_per_block`` widens each kernel
+    K-block to span that many logical pages (page_size 16 alone
+    underfills the 128-lane MXU dim).  Sliding-window (``window > 0``)
+    and softcapped (``cap > 0``) layers, and ``use_kernel=False``, take
+    the pure-jnp gather fallback — the numerics oracle, which runs
+    everywhere.
     """
+    from repro.quant import formats as qfmt, ops as qops
+    fmt = qfmt.resolve(kv_format)
     dtype = x.dtype
     q, k_new, v_new = _project_qkv(params, x, positions, rope_theta)
-    new_pages = {
-        "k": paged_write(pages["k"], k_new.astype(dtype), page_table,
-                         positions, valid, page_size=page_size),
-        "v": paged_write(pages["v"], v_new.astype(dtype), page_table,
-                         positions, valid, page_size=page_size),
-    }
+    if fmt.quantized:
+        new_pages = qops.quantized_pool_write(
+            pages, k_new, v_new, page_table, positions, valid,
+            page_size=page_size, fmt=fmt)
+    else:
+        new_pages = {
+            "k": paged_write(pages["k"], k_new.astype(dtype), page_table,
+                             positions, valid, page_size=page_size),
+            "v": paged_write(pages["v"], v_new.astype(dtype), page_table,
+                             positions, valid, page_size=page_size),
+        }
     if use_kernel and window == 0 and cap <= 0:
         from repro.kernels.paged_attention import paged_attention
         out = paged_attention(q, new_pages["k"], new_pages["v"], page_table,
                               positions[:, 0], valid,
+                              k_scales=new_pages.get("k_scale"),
+                              v_scales=new_pages.get("v_scale"),
                               pages_per_block=pages_per_block,
                               interpret=jax.default_backend() != "tpu")
     else:
         k = paged_gather(new_pages["k"], page_table)         # (B, S, K, D)
         v = paged_gather(new_pages["v"], page_table)
+        if fmt.quantized:
+            # scale sidecar gathered per page, broadcast over page rows —
+            # the dense dequantized view exists ONLY on this oracle path
+            ks = paged_gather_scales(new_pages["k_scale"], page_table,
+                                     page_size)
+            vs = paged_gather_scales(new_pages["v_scale"], page_table,
+                                     page_size)
+            k = qops.dequantize(k, ks[..., None], dtype)
+            v = qops.dequantize(v, vs[..., None], dtype)
         kx = _expand_kv(k, n_heads)
         vx = _expand_kv(v, n_heads)
         scale = 1.0 / math.sqrt(q.shape[-1])

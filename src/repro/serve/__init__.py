@@ -1,11 +1,22 @@
-"""repro.serve — mixed-precision inference engine with speculative decode.
+"""repro.serve — mixed-precision inference engine with speculative decode
+and sub-bf16 quantized KV-cache storage.
 
-The serving half of the MPX discipline as a subsystem: bf16 weights and KV
-cache on the hot path, fp32 only where precision matters (softmax inside
-the model, sampling and speculative verification here).  Components:
+The serving half of the MPX discipline as a subsystem: bf16 weights on
+the hot path, the KV cache stored at whatever precision the ``kv_dtype``
+policy names (bf16 passthrough, or int8 / fp8 pages with per-page amax
+scales — ``repro.quant``), fp32 only where precision matters (softmax
+inside the model, sampling and speculative verification here).  The
+quantized page-pool contract is write-quantize / read-dequantize: every
+chunk's K/V is quantized as it is scattered into the pages (the touched
+pages are requantized against a fresh amax, scales ride a small fp32
+sidecar pool), and the paged-attention kernel multiplies the scales back
+onto K/V blocks in VMEM before the score/output matmuls — decode streams
+the cache at 1 byte/element and a dense bf16 image of it never exists.
+Components:
 
-- :mod:`~repro.serve.cache`     — paged bf16 KV-cache pool (fixed-size
-  pages, per-sequence page tables, alloc on admit / free on retire, and
+- :mod:`~repro.serve.cache`     — paged KV-cache pool (fixed-size
+  pages, per-sequence page tables, alloc on admit / free on retire,
+  optional quantized storage with the scale sidecar, and
   committed/written length watermarks so speculative windows can write
   KV ahead and ``truncate()`` back to the accepted prefix with the
   invariants still checkable)
@@ -25,7 +36,9 @@ the model, sampling and speculative verification here).  Components:
   step shape for prefill, decode, mixed and speculative plans alike;
   with ``use_kernel=True`` every step runs attention through the native
   paged-attention Pallas kernel, which walks the page tables in-kernel
-  instead of materializing a gathered contiguous copy of each slot's KV
+  instead of materializing a gathered contiguous copy of each slot's KV;
+  ``kv_dtype="i8"`` (or "f8_e4m3" / "f8_e3m4", or a ``Policy`` with a
+  ``kv=`` component) selects quantized page storage
 - :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
   throughput / occupancy / acceptance-rate / tokens-per-step stats
 
@@ -55,7 +68,8 @@ Quickstart::
 
     params = mpx.cast_to_bfloat16(T.init_params(key, cfg))
     engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128,
-                               spec_tokens=3)   # n-gram speculative decode
+                               spec_tokens=3,   # n-gram speculative decode
+                               kv_dtype="i8")   # int8 KV pages + scales
     for prompt in prompts:
         engine.submit(prompt, max_new=32)
     for result in engine.drain():

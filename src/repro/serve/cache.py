@@ -1,4 +1,5 @@
-"""Paged bf16 KV-cache pool: fixed-size pages, per-slot page tables.
+"""Paged KV-cache pool: fixed-size pages, per-slot page tables, and
+optional sub-bf16 (int8 / fp8) page storage with a scale sidecar.
 
 The monolithic ``T.init_cache`` slab commits ``n_slots * max_seq`` of KV
 HBM up front whether slots are busy or not.  The paged pool commits memory
@@ -7,13 +8,33 @@ pages per attention layer, and a page table row per slot mapping logical
 page -> physical page.  Token position ``p`` of slot ``b`` lives at
 ``pages[table[b, p // page_size], p % page_size]``.
 
+**Storage precision is a policy, not a constant** (``kv_dtype``, a
+``repro.quant`` format).  The bf16 passthrough is the PR-1..4 layout:
+one ``(num_pages, page_size, K, D)`` bf16 K and V pool per attention
+layer.  Quantized formats ("i8", "f8_e4m3", "f8_e3m4") store the pools
+at 1 byte/element on the format's value grid and add a
+``(num_pages, K)`` fp32 amax-scale *sidecar* per pool — one symmetric
+scale per (page, kv-head), ~``page_size * head_dim / 4`` times smaller
+than the pool it describes.  The write-quantize / read-dequantize
+contract:
+
+- **writes quantize** — ``paged_attend`` routes each chunk's new K/V
+  through :func:`repro.quant.ops.quantized_pool_write`, which gathers
+  exactly the pages the chunk touches, splices the new values into
+  their dequantized image, recomputes each touched page's amax, and
+  requantizes that page (untouched pages keep their bits and scales);
+- **reads dequantize in the consumer** — the paged-attention kernel
+  multiplies the sidecar scales back onto K/V blocks in VMEM before the
+  score/output matmuls (the gather fallback dequantizes its dense
+  oracle view), so the sub-bf16 pool is the only HBM-resident image of
+  the cache and decode's KV read traffic drops with the itemsize.
+
 Bookkeeping (free list, tables, per-slot lengths) is host-side numpy — it
 mutates a few ints per request, never touches the device, and stays out of
-the jitted step.  The device side is a pytree of page pools (one
-(num_pages, page_size, K, D) K and V array per attention layer,
-scan-stacked like the params) built by
-:func:`repro.models.transformer.init_paged_cache`; all layers share one
-table, so admission allocates pages once per sequence.
+the jitted step.  The device side is a pytree of page pools (scale
+sidecars riding in the same per-layer dicts, scan-stacked like the
+params) built by :func:`repro.models.transformer.init_paged_cache`; all
+layers share one table, so admission allocates pages once per sequence.
 
 Allocation policy: the full budget (prompt + max_new tokens) is reserved at
 admission, so a running request can never hit pool exhaustion mid-decode —
@@ -25,17 +46,21 @@ positions beyond the slot's length.  No page churn happens — the pages
 were reserved at admission and the dead positions are overwritten by the
 next window — but the committed/written watermarks make the invariant
 ("committed <= written <= reserved capacity, never rolling a committed
-prefix back") explicitly checkable.
+prefix back") explicitly checkable.  (Under a quantized ``kv_dtype`` a
+dead tail can still nudge a page's amax until it is overwritten — it
+costs precision headroom, never correctness, since attention masks by
+committed position.)
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
+from repro.quant import formats as qfmt
 
 PyTree = Any
 
@@ -45,12 +70,15 @@ class PagedKVCache:
 
     The sentinel physical index ``num_pages`` marks unallocated table
     entries: device-side writes through it are dropped, reads are clamped
-    and masked by sequence length.
+    and masked by sequence length.  ``kv_dtype`` selects the page storage
+    format (``repro.quant`` name or :class:`~repro.quant.KVFormat`;
+    "bf16" = passthrough, quantized formats add the scale sidecars).
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16,
+                 kv_dtype: Union[str, qfmt.KVFormat] = "bf16"):
         if max_seq % page_size:
             raise ValueError(f"max_seq {max_seq} must be a multiple of "
                              f"page_size {page_size}")
@@ -60,8 +88,10 @@ class PagedKVCache:
                           else n_slots * self.max_pages_per_slot)
         self.n_slots = n_slots
         self.sentinel = self.num_pages
+        self.kv_format = qfmt.resolve(kv_dtype)
         self.pages: PyTree = tfm.init_paged_cache(
-            cfg, self.num_pages, page_size, dtype)
+            cfg, self.num_pages, page_size, dtype,
+            kv_format=self.kv_format.name)
         self._free: List[int] = list(range(self.num_pages))
         self._tables = np.full((n_slots, self.max_pages_per_slot),
                                self.sentinel, np.int32)

@@ -31,10 +31,16 @@ per-step gathered dense copy of the cache never exists and there is still
 exactly one compiled step program.
 
 Precision: params are expected pre-cast to the serving dtype (bf16); the
-KV pages are bf16; softmax inside the model, the sampling transforms and
+KV pages store in the ``kv_dtype`` policy format (bf16 passthrough, or
+int8 / fp8 with per-page amax scales dequantized inside the kernel —
+``repro.quant``); softmax inside the model, the sampling transforms and
 the rejection-sampling accept/residual rule are fp32 — the inference half
 of the MPX discipline (verification shares softmax's "known-fragile"
-status: a bf16 tail probability flips accept decisions).
+status: a bf16 tail probability flips accept decisions).  ``kv_dtype``
+accepts the format name, a :class:`~repro.quant.KVFormat`, or a
+:class:`~repro.core.policy.Policy` (its ``kv=`` component), so
+``ServeEngine(cfg, params, kv_dtype=Policy.parse("p=f32,c=bf16,o=bf16,
+kv=i8"))`` threads one policy string end to end.
 """
 from __future__ import annotations
 
@@ -46,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.serve.cache import PagedKVCache
@@ -88,11 +95,14 @@ class ServeEngine:
                  spec_tokens: int = 0,
                  proposer: Optional[Proposer] = None,
                  use_kernel: bool = False, pages_per_block: int = 1,
-                 seed: int = 0):
+                 kv_dtype="bf16", seed: int = 0):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} does not support decode")
         self.cfg = cfg
         self.params = params
+        if hasattr(kv_dtype, "kv_dtype"):     # a core.policy.Policy
+            kv_dtype = kv_dtype.kv_dtype
+        self.kv_format = quant.resolve(kv_dtype)
         self.spec_tokens = int(spec_tokens)
         if proposer is not None and self.spec_tokens == 0:
             raise ValueError(
@@ -103,7 +113,8 @@ class ServeEngine:
             proposer = NGramProposer()
         self.proposer = proposer
         self.cache = PagedKVCache(cfg, n_slots, max_seq,
-                                  page_size=page_size, num_pages=num_pages)
+                                  page_size=page_size, num_pages=num_pages,
+                                  kv_dtype=self.kv_format)
         self.scheduler = Scheduler(self.cache, chunk_size=chunk_size,
                                    max_batched_tokens=max_batched_tokens,
                                    spec_tokens=self.spec_tokens,
@@ -126,7 +137,8 @@ class ServeEngine:
             logits, new_pages = tfm.serve_forward(
                 params, cfg, pages, table, tokens, start, valid,
                 logit_idx=logit_idx, page_size=page_size,
-                use_kernel=use_kernel, pages_per_block=pages_per_block)
+                use_kernel=use_kernel, pages_per_block=pages_per_block,
+                kv_format=self.kv_format.name)
             accept, token = verifier(logits, draft, draft_len, key)
             return accept, token, new_pages
 
@@ -147,6 +159,13 @@ class ServeEngine:
         that request's metrics entry and collide in ``drain()``'s
         id-sorted results (results accumulate for the engine's lifetime).
         """
+        # fail fast on a stub proposer: plan() would otherwise raise mid-
+        # step, after this request reserved pages and entered a batch —
+        # a traceback from inside the scheduler instead of an actionable
+        # "this is a follow-on" at the API boundary
+        unimplemented = getattr(self.proposer, "unimplemented", None)
+        if unimplemented:
+            raise NotImplementedError(unimplemented)
         rid = self._next_id if request_id is None else request_id
         if rid in self._inflight or rid in self._result_ids:
             raise ValueError(

@@ -12,28 +12,48 @@ window's compute — so proposers are free to be heuristic.
 :class:`NGramProposer` is the default: prompt-lookup decoding (the
 draft-model-free scheme of Saxena's prompt-lookup / LLMA) — find the most
 recent earlier occurrence of the context's suffix n-gram and propose its
-historical continuation.  It costs a host-side substring scan, nothing on
-the device, and wins big exactly where serving traffic is repetitive:
+historical continuation.  It costs a host-side lookup, nothing on the
+device, and wins big exactly where serving traffic is repetitive:
 summarization, code edits, retrieval-augmented contexts, agent loops that
-re-quote their own transcript.
+re-quote their own transcript.  When the scheduler passes a
+``request_id`` the proposer keeps a per-request *suffix index* (n-gram ->
+its two most recent start positions) and extends it incrementally with
+the tokens committed since the previous call, so each ``propose()`` is
+O(new tokens) instead of the O(context) rescan that grew quadratically
+over a generation; without an id it falls back to the stateless scan.
 
 :class:`DraftModelProposer` (a small model drafting for a large one) is a
-named follow-on — the interface is here, the implementation is not.
+named follow-on — the stub constructs (so engine wiring can be written
+against it) and raises an actionable error from ``propose()``; the
+engine refuses it at ``submit()`` so the failure is immediate, not
+buried in a mid-step traceback.
 """
 from __future__ import annotations
 
-from typing import List, Protocol, Sequence, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
+    runtime_checkable
 
 
 @runtime_checkable
 class Proposer(Protocol):
     """Host-side draft source for one decoding slot."""
 
-    def propose(self, context: Sequence[int], k: int) -> List[int]:
+    def propose(self, context: Sequence[int], k: int, *,
+                request_id: Optional[int] = None) -> List[int]:
         """Up to ``k`` draft tokens continuing ``context`` (may be fewer,
         or empty when the proposer has no guess).  ``context`` is the
         slot's full token history: prompt + every committed generation,
-        including the pending committed token the window will re-feed."""
+        including the pending committed token the window will re-feed.
+        It is **read-only**: the scheduler passes its live incrementally-
+        maintained history (no per-tick copy — that would be O(context)
+        per step), so a proposer that mutated it would corrupt the
+        slot's state for the rest of the generation.  ``request_id``,
+        when given, keys any per-request incremental state; the context
+        for one id only ever grows by appending."""
+        ...
+
+    def forget(self, request_id: int) -> None:
+        """Drop per-request state (called when the request retires)."""
         ...
 
 
@@ -46,6 +66,16 @@ class NGramProposer:
     ``k`` tokens that followed that occurrence.  Deterministic (the draft
     distribution is a one-hot), so the verify step's accept rule reduces
     to the target probability of the proposed token.
+
+    With a ``request_id`` the lookup is served from a memoized suffix
+    index: for each n in [min_ngram, max_ngram], a dict mapping the
+    n-gram tuple to its two most recent start positions, extended
+    incrementally as the context grows (committed tokens are append-only
+    per request).  Keeping *two* positions makes "most recent EARLIER
+    occurrence" O(1): when the latest occurrence is the live suffix
+    itself, the previous one is the answer.  The per-request cost of a
+    generation step is O(tokens committed since the last call), not
+    O(len(context)).
     """
 
     def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
@@ -55,11 +85,15 @@ class NGramProposer:
                 f"min_ngram={min_ngram} max_ngram={max_ngram}")
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
+        # request_id -> (tokens seen so far,
+        #                n -> {gram: (latest start, previous start)})
+        self._index: Dict[int, Tuple[List[int],
+                                     Dict[int, Dict[tuple,
+                                                    Tuple[int, int]]]]] = {}
 
-    def propose(self, context: Sequence[int], k: int) -> List[int]:
-        ctx = list(context)
-        if k <= 0 or len(ctx) < self.min_ngram + 1:
-            return []
+    # -- stateless scan (no request_id) -------------------------------------
+
+    def _scan(self, ctx: List[int], k: int) -> List[int]:
         for n in range(min(self.max_ngram, len(ctx) - 1),
                        self.min_ngram - 1, -1):
             suffix = ctx[-n:]
@@ -69,18 +103,95 @@ class NGramProposer:
                     return ctx[i + n:i + n + k]
         return []
 
+    # -- memoized suffix index (request_id) ---------------------------------
+
+    def _extend(self, ctx: Sequence[int], request_id: int):
+        toks, grams = self._index.setdefault(
+            request_id, ([], {n: {} for n in range(self.min_ngram,
+                                                   self.max_ngram + 1)}))
+        done = len(toks)
+        # O(1) extension guard — a full prefix compare would silently
+        # reintroduce the O(context)-per-call cost this index removes.
+        # Engine contexts are append-only per single-use id, so length
+        # shrinkage or a changed boundary token are the only realistic
+        # divergences; on either, rebuild rather than serve stale drafts.
+        if len(ctx) < done or (done and int(ctx[done - 1]) != toks[-1]):
+            toks.clear()
+            for d in grams.values():
+                d.clear()
+            done = 0
+        toks.extend(int(t) for t in ctx[done:])
+        for n, d in grams.items():
+            # index every complete n-gram that gained its start since the
+            # last call: starts done-n+1 .. len-n (clamped)
+            for i in range(max(done - n + 1, 0), len(toks) - n + 1):
+                g = tuple(toks[i:i + n])
+                last, _ = d.get(g, (-1, -1))
+                if i != last:
+                    d[g] = (i, last)
+        return toks, grams
+
+    def _lookup(self, toks: List[int],
+                grams: Dict[int, Dict[tuple, Tuple[int, int]]],
+                k: int) -> List[int]:
+        for n in range(min(self.max_ngram, len(toks) - 1),
+                       self.min_ngram - 1, -1):
+            suffix = tuple(toks[-n:])
+            last, prev = grams[n].get(suffix, (-1, -1))
+            # the latest occurrence IS the live suffix (start len-n);
+            # "most recent earlier" is the one before it
+            i = prev if last == len(toks) - n else last
+            if i >= 0:
+                return toks[i + n:i + n + k]
+        return []
+
+    # -- Proposer protocol ---------------------------------------------------
+
+    def propose(self, context: Sequence[int], k: int, *,
+                request_id: Optional[int] = None) -> List[int]:
+        if k <= 0 or len(context) < self.min_ngram + 1:
+            return []
+        if request_id is None:
+            return self._scan(list(context), k)
+        toks, grams = self._extend(context, request_id)
+        return self._lookup(toks, grams, k)
+
+    def forget(self, request_id: int) -> None:
+        self._index.pop(request_id, None)
+
 
 class DraftModelProposer:
-    """Draft-model speculation stub (named follow-on).
+    """Draft-model speculation stub (named ROADMAP follow-on).
 
-    Running a small transformer as the drafter needs its own decode state
-    threaded through the engine tick; this PR ships the host-side n-gram
-    proposer and the verify/commit machinery only.
+    Running a small transformer as the drafter needs its own decode
+    state threaded through the engine tick (a second paged cache, the
+    draft model's own prefill of every admitted prompt, and rollback of
+    its state over rejected windows).  The repo ships the host-side
+    n-gram proposer and the verify/commit machinery; this class reserves
+    the surface — it constructs (so callers can wire configuration) but
+    every ``propose()`` raises, and :meth:`repro.serve.ServeEngine.submit`
+    refuses a stub proposer up front so the failure names the follow-on
+    instead of surfacing mid-step from inside ``Scheduler.plan``.
     """
 
-    def __init__(self, *args, **kwargs):
-        raise NotImplementedError(
-            "draft-model proposer is a follow-on; use NGramProposer")
+    #: why this proposer cannot serve traffic — ServeEngine.submit checks
+    #: for this attribute to fail fast with the same message.
+    unimplemented = (
+        "DraftModelProposer is the 'draft-model proposer' ROADMAP "
+        "follow-on: drafting with a small transformer needs its own "
+        "decode state (second paged cache + prefill + rejected-window "
+        "rollback) threaded through the engine tick, which is not "
+        "implemented yet.  Use NGramProposer (the default for "
+        "spec_tokens > 0), or drop spec_tokens to disable speculation.")
 
-    def propose(self, context: Sequence[int], k: int) -> List[int]:
-        raise NotImplementedError
+    def __init__(self, draft_cfg=None, draft_params=None, **kwargs):
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.kwargs = kwargs
+
+    def propose(self, context: Sequence[int], k: int, *,
+                request_id: Optional[int] = None) -> List[int]:
+        raise NotImplementedError(self.unimplemented)
+
+    def forget(self, request_id: int) -> None:
+        pass

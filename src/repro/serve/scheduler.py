@@ -36,6 +36,7 @@ and retries next step.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from collections import deque
 from typing import Deque, List, Optional, Sequence, Set, Tuple
 
@@ -69,6 +70,17 @@ class _Slot:
     length: int = 0       # committed cached tokens (prompt + accepted gen)
     out: List[int] = dataclasses.field(default_factory=list)
     next_token: int = -1  # sampled but not yet fed to a decode step
+    # prompt + out, maintained incrementally by commit() so the per-tick
+    # proposer call costs O(new tokens), not an O(context) concat
+    ctx: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.ctx = list(self.req.prompt)
+
+    def emit(self, tokens: List[int]) -> None:
+        """Append committed generation tokens (keeps ctx == prompt+out)."""
+        self.out.extend(tokens)
+        self.ctx.extend(tokens)
 
     @property
     def prefilling(self) -> bool:
@@ -154,6 +166,16 @@ class Scheduler:
         self.chunk_size = chunk_size
         self.spec_tokens = spec_tokens
         self.proposer = proposer
+        # pass request_id to proposers that accept it (NGramProposer keys
+        # its incremental suffix index on it); plain (context, k)
+        # proposers — e.g. test doubles — keep working unchanged
+        self._propose_takes_id = False
+        if proposer is not None:
+            try:
+                params = inspect.signature(proposer.propose).parameters
+                self._propose_takes_id = "request_id" in params
+            except (TypeError, ValueError):
+                self._propose_takes_id = False
         if max_batched_tokens is None:
             # never throttles: every slot can contribute a full chunk
             max_batched_tokens = self.n_slots * chunk_size
@@ -215,6 +237,8 @@ class Scheduler:
         self.cache.retire(slot_id)
         self.slots[slot_id] = None
         self._active_ids.discard(slot.req.request_id)
+        if self.proposer is not None and hasattr(self.proposer, "forget"):
+            self.proposer.forget(slot.req.request_id)
         return slot
 
     # -- planning -----------------------------------------------------------
@@ -276,8 +300,17 @@ class Scheduler:
                 remaining = slot.req.max_new - len(slot.out)
                 k_cap = min(self.spec_tokens, remaining - 1, budget)
                 if k_cap > 0:
-                    prop = self.proposer.propose(
-                        slot.req.prompt + slot.out, k_cap)[:k_cap]
+                    # prompt + out, maintained incrementally — handed to
+                    # the proposer WITHOUT a copy (a copy would be the
+                    # O(context)-per-tick cost the ctx field removes);
+                    # the Proposer protocol pins context as read-only
+                    ctx = slot.ctx
+                    if self._propose_takes_id:
+                        prop = self.proposer.propose(
+                            ctx, k_cap,
+                            request_id=slot.req.request_id)[:k_cap]
+                    else:
+                        prop = self.proposer.propose(ctx, k_cap)[:k_cap]
                     if prop:
                         k = len(prop)
                         tokens[slot_id, 1:1 + k] = prop
@@ -325,7 +358,7 @@ class Scheduler:
                 self.cache.truncate(slot_id, slot.length)
                 if not slot.prefilling:    # prompt fully cached: the last
                     tok = int(sampled[slot_id])  # position's logits sampled
-                    slot.out.append(tok)
+                    slot.emit([tok])
                     slot.next_token = tok
                     first_token.append(rid)
                     emitted.append((rid, 1))
@@ -337,7 +370,7 @@ class Scheduler:
                         f"{int(plan.draft_len[slot_id])} drafts")
                 new = [int(t) for t in plan.draft[slot_id, :a]]
                 new.append(int(sampled[slot_id]))
-                slot.out.extend(new)
+                slot.emit(new)
                 slot.next_token = new[-1]
                 slot.length += len(new)
                 self.cache.truncate(slot_id, slot.length)

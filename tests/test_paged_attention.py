@@ -16,8 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import quant
 from repro.kernels import ref as kref
 from repro.kernels.paged_attention import paged_attention
+from repro.quant import ops as qops
 
 
 def _tol(dtype):
@@ -215,10 +217,117 @@ def test_paged_kernel_page_table_permutation_property():
 
 
 # --------------------------------------------------------------------------
+# quantized pools: in-kernel dequant vs the quantized ragged oracle
+# --------------------------------------------------------------------------
+
+def _quantize_case(q, pk, pv, table, fmt):
+    """Quantize a `_random_paged_case`'s pools page by page.
+
+    Allocated pages get per-(page, head) amax scales; free pages keep
+    NaN values AND get NaN scales, so any kernel read of an unallocated
+    page (values or sidecar) poisons the output and fails the isfinite
+    assert."""
+    n_pages, ps, kv, d = pk.shape
+    alloc = np.unique(np.asarray(table)[np.asarray(table) < n_pages])
+    qk = jnp.zeros((n_pages, ps, kv, d), fmt.storage_dtype())
+    qv = jnp.zeros_like(qk)
+    if fmt.kind == "float":             # NaN representable: poison pools
+        qk = jnp.full_like(qk, jnp.nan)
+        qv = jnp.full_like(qv, jnp.nan)
+    sk = jnp.full((n_pages, kv), jnp.nan, jnp.float32)
+    sv = jnp.full_like(sk, jnp.nan)
+    for pg in alloc:
+        pg = int(pg)
+        kb = jnp.nan_to_num(pk[pg]).astype(jnp.float32)
+        vb = jnp.nan_to_num(pv[pg]).astype(jnp.float32)
+        ksc = qops.amax_scale(kb, fmt, axes=(0, 2))
+        vsc = qops.amax_scale(vb, fmt, axes=(0, 2))
+        qk = qk.at[pg].set(qops.quantize(kb, ksc[None, :, None], fmt))
+        qv = qv.at[pg].set(qops.quantize(vb, vsc[None, :, None], fmt))
+        sk = sk.at[pg].set(ksc)
+        sv = sv.at[pg].set(vsc)
+    return qk, qv, sk, sv
+
+
+@pytest.mark.parametrize("fmt_name", ["i8", "f8_e4m3", "f8_e3m4"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("c", [1, 8])
+def test_quantized_paged_kernel_vs_quantized_ref(fmt_name, dtype, c):
+    """TENTPOLE: the kernel's in-VMEM dequant (each sub-page's (1, 1)
+    blocked-VMEM scale resolved by the same index map as its values)
+    matches the quantized ragged oracle across the same mixed batch the
+    bf16 tests pin — prefill chunk, mid-stream decode, fresh decode,
+    idle slot — and never touches an unallocated page's values OR
+    scales (both NaN-poisoned)."""
+    fmt = quant.resolve(fmt_name)
+    b, h, kv, d = 4, 8, 2, 32
+    page_size, pmax = 8, 6
+    n_pages = 4 * pmax
+    start = np.array([11, 2 * page_size + 3, 0, 0], np.int32)
+    valid = np.array([c, 1, 1, 0], np.int32)
+    q, pk, pv, table = _random_paged_case(
+        0, b, c, h, kv, d, n_pages, page_size, pmax, start, valid, dtype)
+    qk, qv, sk, sv = _quantize_case(q, pk, pv, table, fmt)
+    got = paged_attention(q, qk, qv, table, jnp.asarray(start),
+                          jnp.asarray(valid), k_scales=sk, v_scales=sv,
+                          interpret=True)
+    got = np.asarray(got, np.float32)
+    assert np.isfinite(got).all()
+    want = kref.quantized_paged_attention_ref(
+        q, qk, qv, sk, sv, table, jnp.asarray(start), jnp.asarray(valid))
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+    assert (got[3] == 0).all()          # idle slot: exact zeros
+    if c > 1:
+        assert (got[1, 1:] == 0).all() and (got[2, 1:] == 0).all()
+
+
+@pytest.mark.parametrize("ppb", [2, 4])
+def test_quantized_kernel_pages_per_block_parity(ppb):
+    """Multi-page K-blocks dequantize each sub-page with its OWN page's
+    scale before the VMEM concatenation — parity with ppb=1 and with the
+    oracle on ragged lengths that straddle block boundaries."""
+    fmt = quant.I8
+    b, c, h, kv, d = 4, 8, 8, 2, 32
+    page_size, pmax = 8, 6
+    start = np.array([11, 2 * page_size + 3, 0, 0], np.int32)
+    valid = np.array([c, 1, 1, 0], np.int32)
+    q, pk, pv, table = _random_paged_case(
+        0, b, c, h, kv, d, 4 * pmax, page_size, pmax, start, valid,
+        jnp.float32)
+    qk, qv, sk, sv = _quantize_case(q, pk, pv, table, fmt)
+    args = (q, qk, qv, table, jnp.asarray(start), jnp.asarray(valid))
+    got = paged_attention(*args, k_scales=sk, v_scales=sv,
+                          pages_per_block=ppb, interpret=True)
+    base = paged_attention(*args, k_scales=sk, v_scales=sv,
+                           pages_per_block=1, interpret=True)
+    got = np.asarray(got, np.float32)
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, np.asarray(base, np.float32),
+                               atol=1e-6, rtol=1e-6)
+    want = kref.quantized_paged_attention_ref(
+        q, qk, qv, sk, sv, table, jnp.asarray(start), jnp.asarray(valid))
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_quantized_kernel_requires_both_scales():
+    b, c, h, kv, d, page_size, pmax = 2, 1, 4, 2, 16, 8, 2
+    start = np.array([3, 0], np.int32)
+    valid = np.array([1, 0], np.int32)
+    q, pk, pv, table = _random_paged_case(
+        5, b, c, h, kv, d, 2 * pmax, page_size, pmax, start, valid,
+        jnp.float32)
+    with pytest.raises(ValueError, match="together"):
+        paged_attention(q, pk, pv, table, start, valid,
+                        k_scales=jnp.ones((2 * pmax, kv)), interpret=True)
+
+
+# --------------------------------------------------------------------------
 # acceptance: the traced serve step has no gathered dense intermediate
 # --------------------------------------------------------------------------
 
-def _serve_jaxpr(use_kernel):
+def _serve_jaxpr(use_kernel, kv_format="bf16"):
     from repro import mpx
     from repro.configs.base import ModelConfig
     from repro.models import transformer as T
@@ -230,7 +339,8 @@ def _serve_jaxpr(use_kernel):
         tie_embeddings=True, remat="none")
     b, pmax, page_size = 3, 5, 8
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
-    pages = T.init_paged_cache(cfg, n_pages=b * pmax, page_size=page_size)
+    pages = T.init_paged_cache(cfg, n_pages=b * pmax, page_size=page_size,
+                               kv_format=kv_format)
     table = jnp.zeros((b, pmax), jnp.int32)
     tokens = jnp.zeros((b, 4), jnp.int32)
     start = jnp.zeros((b,), jnp.int32)
@@ -238,7 +348,7 @@ def _serve_jaxpr(use_kernel):
     jaxpr = jax.make_jaxpr(
         lambda p, pg, tb, tk, st, vl: T.serve_forward(
             p, cfg, pg, tb, tk, st, vl, page_size=page_size,
-            use_kernel=use_kernel))(
+            use_kernel=use_kernel, kv_format=kv_format))(
         params, pages, table, tokens, start, valid)
     # the gathered contiguous view is (B, Pmax*page_size, K, D)
     dense = re.compile(r"\[3,40,2,8\]")
@@ -248,3 +358,15 @@ def _serve_jaxpr(use_kernel):
 def test_serve_forward_use_kernel_never_gathers():
     assert _serve_jaxpr(use_kernel=False)      # probe is valid: gather path
     assert not _serve_jaxpr(use_kernel=True)   # kernel path: no dense copy
+
+
+@pytest.mark.parametrize("kv_format", ["i8", "f8_e4m3"])
+def test_serve_forward_quantized_kernel_never_materializes_dense(kv_format):
+    """ACCEPTANCE: with a quantized KV format the kernel path still traces
+    with NO (B, Pmax*page_size, K, D) aval of ANY dtype — neither a
+    gathered pool copy nor a dense dequantized bf16 view (dequant happens
+    block-by-block in VMEM; write-requantization touches only the
+    chunk's (B, wp, page_size, K, D) pages).  The gather fallback DOES
+    materialize it — which is what validates the probe."""
+    assert _serve_jaxpr(use_kernel=False, kv_format=kv_format)
+    assert not _serve_jaxpr(use_kernel=True, kv_format=kv_format)
