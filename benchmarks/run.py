@@ -8,7 +8,10 @@ Prints ``name,us_per_call,derived`` CSV, per the repo contract:
 - ``attention_*``           — blocked-vs-plain attention (memory roofline)
 - ``serving_*``             — repro.serve engine: tok/s + TTFT + inter-token
   p50/p95 vs slot count, paged-kernel vs gather-path rows on an identical
-  workload, and estimated HBM bytes per decode token for both paths
+  workload, estimated HBM bytes per decode token for both paths and per
+  KV format, speculative-decode accept/steps rows, and
+  ``serving_obs_overhead_pct`` — the tok/s cost of request tracing
+  (``repro.obs``; budget <3%)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run``
 (``python -m benchmarks.serving_bench --json out.json`` runs just the

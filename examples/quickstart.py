@@ -4,12 +4,21 @@ Mirrors the paper's Example 2: the ONLY changes vs a full-precision pipeline
 are (1) `mpx.filter_grad(loss, loss_scaling)` instead of a plain grad, and
 (2) `mpx.optimizer_update(...)` instead of update+apply.
 
+The run also demonstrates precision observability (`repro.obs`): the loss
+scale starts deliberately above what fp16 gradients can absorb, so the §3.3
+controller overflows, halves, and settles — every transition lands in a
+:class:`~repro.obs.precision.PrecisionStats` snapshot (trajectory, overflow
+count, halving/doubling events) printed and JSON-exported at the end.
+
 Run: PYTHONPATH=src python examples/quickstart.py
 """
+import json
+
 import jax
 import jax.numpy as jnp
 
 from repro import mpx
+from repro.obs.precision import PrecisionStats
 from repro.optim import adamw
 
 
@@ -43,7 +52,12 @@ def main():
     model = init_mlp(key, [32, 128, 128, 1])
     optimizer = adamw(learning_rate=1e-3, weight_decay=0.0)
     opt_state = optimizer.init(model)
-    loss_scaling = mpx.DynamicLossScaling(2.0 ** 15, period=200)
+    # start the scale ABOVE what fp16 cotangents can absorb: the first steps
+    # overflow, the controller halves until gradients fit, then ramps back —
+    # the full §3.3 feedback loop, captured by PrecisionStats below
+    loss_scaling = mpx.DynamicLossScaling(2.0 ** 24, period=50)
+    precision = PrecisionStats()
+    precision.record_scaling(0, loss_scaling)   # trajectory origin
 
     x = jax.random.normal(jax.random.key(1), (256, 32))
     y = jnp.sum(jnp.sin(x), axis=-1, keepdims=True)
@@ -56,15 +70,24 @@ def main():
             loss_fn, loss_scaling)(model, batch)
         model, opt_state = mpx.optimizer_update(
             model, optimizer, opt_state, grads, grads_finite)
-        return model, opt_state, loss_scaling
+        return model, opt_state, loss_scaling, grads_finite
 
     for step in range(200):
-        model, opt_state, loss_scaling = train_step(model, opt_state,
-                                                    loss_scaling, batch)
+        model, opt_state, loss_scaling, finite = train_step(
+            model, opt_state, loss_scaling, batch)
+        precision.record_scaling(step + 1, loss_scaling, bool(finite))
         if (step + 1) % 50 == 0:
             print(f"step {step+1:4d}  loss={float(loss_fn(model, batch)):.4f}"
                   f"  scale={float(loss_scaling.loss_scaling):.0f}")
     mpx.set_half_dtype(jnp.bfloat16)
+
+    snap = precision.snapshot()
+    with open("quickstart_precision.json", "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"precision: {precision.overflow_steps} overflow steps skipped, "
+          f"{precision.scale_halvings} halvings, "
+          f"{precision.scale_doublings} doublings "
+          f"(trajectory + counters -> quickstart_precision.json)")
     print("done — mixed-precision fp16 training with dynamic loss scaling")
 
 

@@ -108,6 +108,17 @@ class DynamicLossScaling:
             factor=self.factor, min_loss_scaling=self.min_loss_scaling,
             max_loss_scaling=self.max_loss_scaling)
 
+    def telemetry(self) -> dict:
+        """Host-side view of the scaling state for ``repro.obs``.
+
+        Transfers two scalars (scale, consecutive-finite counter) — call
+        at logging cadence, never inside the jitted step; feed the dict
+        to :meth:`repro.obs.precision.PrecisionStats.record_step` /
+        ``record_scaling`` to build the §3.3 trajectory.
+        """
+        return {"loss_scale": float(self.loss_scaling),
+                "counter": int(self.counter)}
+
     def __repr__(self):
         return (f"DynamicLossScaling(scaling={self.loss_scaling}, "
                 f"counter={self.counter}, period={self.period}, "
@@ -154,6 +165,12 @@ class NoOpLossScaling:
     def adjust(self, grads_finite: jax.Array) -> "NoOpLossScaling":
         del grads_finite
         return self
+
+    def telemetry(self) -> dict:
+        """Same shape as :meth:`DynamicLossScaling.telemetry` (scale 1,
+        no counter) so observability code needs no isinstance checks —
+        and no device transfer here."""
+        return {"loss_scale": 1.0, "counter": 0}
 
 
 def all_finite(tree: PyTree) -> jax.Array:

@@ -1,0 +1,58 @@
+"""repro.obs — unified telemetry: metrics registry, request tracing, and
+precision observability.
+
+Three dependency-free layers instrumenting both halves of the stack:
+
+- :mod:`~repro.obs.registry` — labeled counters / gauges /
+  log2-bucketed histograms with ``snapshot()`` dicts, Prometheus text
+  exposition, and JSON dumps.  :class:`repro.serve.EngineStats` is built
+  on it (its ``summary()`` schema unchanged), and the serving engine,
+  scheduler and paged cache report queue depth, admissions, page-pool
+  occupancy/high-watermark and speculative truncations into it.
+- :mod:`~repro.obs.trace` — a span/event :class:`Tracer` (injectable
+  clock, bounded ring buffer) exporting Chrome trace-event JSON: a serve
+  session renders in Perfetto as per-slot request timelines (submit →
+  admit → prefill chunks → decode/spec windows with accept counts →
+  truncate → retire) over an engine-phase track (plan / device step /
+  host sync / commit).  Plus :func:`~repro.obs.trace.profiler_trace`,
+  the optional ``jax.profiler`` trace-dir hook.
+- :mod:`~repro.obs.precision` — the MPX §3.3 signals:
+  :class:`PrecisionStats` (loss-scale trajectory, overflow/skip-step
+  counters, halving/doubling events) and
+  :func:`~repro.obs.precision.per_layer_grad_summary`, per-layer grad
+  amax / nonfinite / underflow fractions computed *inside* the jitted
+  train step as fixed-shape arrays — no host callbacks.
+
+Everything here is host-side bookkeeping recorded around the jitted
+steps; tracing a serve session adds zero device syncs to
+``ServeEngine.step()`` (pinned by tests) and <3% tok/s on the bench
+workload (the ``serving_obs_overhead_pct`` CI row).
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
+                                merged_prometheus, merged_snapshot)
+from repro.obs.trace import Tracer, profiler_trace, validate_chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "PrecisionStats",
+    "Registry",
+    "Tracer",
+    "grad_layer_names",
+    "merged_prometheus",
+    "merged_snapshot",
+    "per_layer_grad_summary",
+    "profiler_trace",
+    "validate_chrome_trace",
+]
+
+
+def __getattr__(name):
+    # precision imports jax; keep `import repro.obs` free of that cost
+    # for stdlib-only consumers (registry/trace never touch jax)
+    if name in ("PrecisionStats", "per_layer_grad_summary",
+                "grad_layer_names"):
+        from repro.obs import precision
+        return getattr(precision, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,219 @@
+"""Precision observability — the MPX §3.3 control loop as exportable
+signals.
+
+Dynamic loss scaling *is* a feedback controller: the scale rises until a
+gradient overflows, the overflow halves it, and the optimizer skips the
+step.  Micikevicius et al. (1710.03740) motivated the heuristic with
+gradient-magnitude histograms; Zhao et al. (1910.12385) showed the
+statistics that decide whether a layer trains are *per-layer*.  This
+module makes both observable:
+
+- :class:`PrecisionStats` — host-side recorder for the loss-scale
+  trajectory, overflow/skip-step counters, and halving/doubling events,
+  backed by a :class:`~repro.obs.registry.Registry` so the same data
+  exports as Prometheus text or a JSON snapshot.  Feed it from the
+  trainer loop (:meth:`record_scaling` takes the loss-scaling object's
+  ``telemetry()`` dict, or :meth:`record_step` takes raw floats).
+- :func:`per_layer_grad_summary` — the **in-jit** half: per-layer grad
+  amax / nonfinite fraction / underflow fraction computed inside the
+  jitted train step as fixed-shape ``(L,)`` fp32 arrays.  No host
+  callbacks, no shape dependence on values — it rides the metrics dict
+  the step already returns, so reading it costs nothing beyond the
+  transfer the trainer's logging cadence already pays.
+  :func:`grad_layer_names` gives the matching static layer names.
+
+"Underflow fraction" is the fraction of *nonzero* gradient elements whose
+magnitude falls below fp16's smallest normal (``2**-14``) — the mass
+dynamic loss scaling exists to save.  A rising underflow fraction with a
+capped scale is the §3.3 failure mode; a per-layer view shows *which*
+layer hits it first (Zhao et al.'s argument for per-layer scales, the
+ROADMAP's fp8-training prerequisite).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.registry import Registry
+
+PyTree = Any
+
+#: smallest normal float16 — below this, fp16 gradients go subnormal/zero
+FP16_TINY = 2.0 ** -14
+
+
+# -- in-jit per-layer summaries (fixed shapes, no host callbacks) -----------
+
+def _inexact_leaves_with_path(tree: PyTree) -> List[Tuple[str, Any]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                     jnp.inexact):
+            name = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            out.append((name, leaf))
+    return out
+
+
+def grad_layer_names(tree: PyTree) -> List[str]:
+    """Static layer names matching :func:`per_layer_grad_summary` order.
+
+    Call once on the host with any tree of the gradients' structure
+    (e.g. the params); the jitted summary arrays index by this list.
+    """
+    return [name for name, _ in _inexact_leaves_with_path(tree)]
+
+
+def per_layer_grad_summary(grads: PyTree,
+                           tiny: float = FP16_TINY) -> Dict[str, jax.Array]:
+    """Per-layer gradient statistics, computed inside jit.
+
+    Returns three ``(L,)`` fp32 arrays (L = number of inexact leaves,
+    order = :func:`grad_layer_names`):
+
+    - ``grad_amax_per_layer``      — ``max(|g|)`` per leaf (0 for empty);
+    - ``grad_nonfinite_frac_per_layer`` — fraction of non-finite elements;
+    - ``grad_underflow_frac_per_layer`` — fraction of *nonzero* elements
+      with ``|g| < tiny`` (underflow candidates at fp16 precision).
+
+    Everything is fixed-shape and data-independent, so the summary adds
+    no recompilation, no host callback, and no extra device sync — it
+    travels in the metrics dict the train step already returns.
+    """
+    leaves = [leaf for _, leaf in _inexact_leaves_with_path(grads)]
+    if not leaves:
+        z = jnp.zeros((0,), jnp.float32)
+        return {"grad_amax_per_layer": z,
+                "grad_nonfinite_frac_per_layer": z,
+                "grad_underflow_frac_per_layer": z}
+    amax, nonfinite, underflow = [], [], []
+    for g in leaves:
+        a = jnp.abs(g.astype(jnp.float32))
+        finite = jnp.isfinite(a)
+        nz = a > 0
+        amax.append(jnp.max(a) if a.size else jnp.float32(0))
+        nonfinite.append(jnp.mean((~finite).astype(jnp.float32)))
+        # underflow counts only finite, nonzero magnitudes below tiny;
+        # guard the mean against all-zero leaves (0/0 -> 0, not NaN)
+        n_nz = jnp.sum(nz.astype(jnp.float32))
+        n_uf = jnp.sum((nz & finite & (a < tiny)).astype(jnp.float32))
+        underflow.append(n_uf / jnp.maximum(n_nz, 1.0))
+    return {"grad_amax_per_layer": jnp.stack(amax),
+            "grad_nonfinite_frac_per_layer": jnp.stack(nonfinite),
+            "grad_underflow_frac_per_layer": jnp.stack(underflow)}
+
+
+# -- host-side trajectory recorder ------------------------------------------
+
+class PrecisionStats:
+    """Loss-scale trajectory + overflow accounting, registry-backed.
+
+    Record once per (logged) step; the trajectory keeps ``(step, scale)``
+    pairs so a run's §3.3 control-loop behaviour — ramp, overflow
+    halvings, recovery doublings — is replayable from the snapshot.
+    """
+
+    def __init__(self, registry: Optional[Registry] = None):
+        self.registry = registry if registry is not None else Registry()
+        r = self.registry
+        self._steps = r.counter(
+            "train_steps_total", "train steps recorded")
+        self._overflows = r.counter(
+            "train_overflow_steps_total",
+            "steps with non-finite grads (optimizer update skipped)")
+        self._scale_events = r.counter(
+            "train_loss_scale_events_total",
+            "loss-scale transitions by direction", labels=("event",))
+        self._scale_gauge = r.gauge(
+            "train_loss_scale", "current dynamic loss scale")
+        self._counter_gauge = r.gauge(
+            "train_loss_scale_counter",
+            "consecutive finite steps toward the next scale doubling")
+        self._layer_gauges: Dict[str, Any] = {}
+        self.scale_trajectory: List[Tuple[int, float]] = []
+        self._prev_scale: Optional[float] = None
+        self.layer_names: List[str] = []
+        self._layer_latest: Dict[str, List[float]] = {}
+
+    # -- per-step scaling state ---------------------------------------------
+
+    def record_step(self, step: int, scale: float, grads_finite: bool,
+                    counter: Optional[int] = None) -> None:
+        """One training step's scaling outcome (host floats/bools)."""
+        scale = float(scale)
+        self._steps.inc()
+        if not grads_finite:
+            self._overflows.inc()
+        if self._prev_scale is not None:
+            if scale < self._prev_scale:
+                self._scale_events.inc(event="halved")
+            elif scale > self._prev_scale:
+                self._scale_events.inc(event="doubled")
+        self._prev_scale = scale
+        self.scale_trajectory.append((int(step), scale))
+        self._scale_gauge.set(scale)
+        if counter is not None:
+            self._counter_gauge.set(int(counter))
+
+    def record_scaling(self, step: int, scaling: Any,
+                       grads_finite: bool = True) -> None:
+        """Record from a loss-scaling object exposing ``telemetry()``
+        (:class:`repro.core.loss_scaling.DynamicLossScaling`).  Forces a
+        host transfer of two scalars — call at logging cadence, not
+        inside the step."""
+        t = scaling.telemetry()
+        self.record_step(step, t["loss_scale"], grads_finite,
+                         counter=t.get("counter"))
+
+    # -- per-layer summaries -------------------------------------------------
+
+    def record_layer_summary(self, layer_names: List[str],
+                             summary: Dict[str, Any]) -> None:
+        """Latest per-layer arrays from :func:`per_layer_grad_summary`
+        (already transferred to host, e.g. via ``np.asarray``)."""
+        self.layer_names = list(layer_names)
+        for key, arr in summary.items():
+            vals = [float(v) for v in arr]
+            if len(vals) != len(layer_names):
+                raise ValueError(
+                    f"{key}: {len(vals)} values for "
+                    f"{len(layer_names)} layer names")
+            self._layer_latest[key] = vals
+            g = self._layer_gauges.get(key)
+            if g is None:
+                g = self.registry.gauge(
+                    key.replace("_per_layer", ""),
+                    "per-layer gradient statistic", labels=("layer",))
+                self._layer_gauges[key] = g
+            for name, v in zip(layer_names, vals):
+                g.set(v, layer=name)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def steps(self) -> int:
+        return int(self._steps.total)
+
+    @property
+    def overflow_steps(self) -> int:
+        """Steps whose optimizer update was skipped (non-finite grads)."""
+        return int(self._overflows.total)
+
+    @property
+    def scale_halvings(self) -> int:
+        return int(self._scale_events.value(event="halved"))
+
+    @property
+    def scale_doublings(self) -> int:
+        return int(self._scale_events.value(event="doubled"))
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Registry snapshot + the raw trajectory and per-layer arrays."""
+        out: Dict[str, Any] = dict(self.registry.snapshot())
+        out["loss_scale_trajectory"] = list(self.scale_trajectory)
+        if self.layer_names:
+            out["grad_layer_names"] = list(self.layer_names)
+            out.update(self._layer_latest)
+        return out

@@ -1,0 +1,297 @@
+"""Metrics registry: labeled counters / gauges / log2-bucketed histograms.
+
+Dependency-free (stdlib only) so every layer of the stack — the serving
+hot path, the trainer, the benchmarks — can instrument itself without
+pulling a metrics client into the import graph.  All instruments are
+host-side plain Python: they are updated *around* the jitted steps, never
+inside them (in-jit telemetry lives in :mod:`repro.obs.precision` as
+fixed-shape arrays), so registering a metric can never add a device sync.
+
+Model (a deliberately small subset of the Prometheus data model):
+
+- a :class:`Registry` owns named instruments; ``counter()`` / ``gauge()``
+  / ``histogram()`` are get-or-create, so independent call sites can
+  share one series by name;
+- instruments carry a fixed tuple of **label names**; each distinct
+  label-value combination is an independent series
+  (``steps.inc(kind="mixed")``);
+- :class:`Counter` only goes up; :class:`Gauge` is set (or ratcheted via
+  ``set_max`` — high-watermarks); :class:`Histogram` buckets observations
+  at powers of two (``le = 2**e``) — the right shape for latencies and
+  gradient magnitudes, where decades matter and linear buckets alias;
+- exports: ``snapshot()`` (flat ``{series_name: value}`` dict — the thing
+  tests assert on), ``prometheus()`` (text exposition format, the
+  ``metrics.prom`` artifact), and ``json_dump()``.
+
+Thread-safety is *not* provided: the engine and trainer are
+single-threaded hosts, and a lock per ``inc()`` on the serving hot path
+would be pure overhead.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_INF = float("inf")
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.match(name):
+        raise ValueError(f"invalid metric name {name!r}")
+    return name
+
+
+def _fmt_labels(label_names: Sequence[str], key: Tuple[str, ...]) -> str:
+    if not label_names:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in zip(label_names, key))
+    return "{" + inner + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == _INF:
+        return "+Inf"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+class _Metric:
+    """Base: one named instrument holding one series per label-value set."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = ()):
+        self.name = _check_name(name)
+        self.help = help
+        self.label_names = tuple(labels)
+        for ln in self.label_names:
+            _check_name(ln)
+        self._series: Dict[Tuple[str, ...], float] = {}
+
+    def _key(self, labels: Dict[str, object]) -> Tuple[str, ...]:
+        if set(labels) != set(self.label_names):
+            raise ValueError(
+                f"{self.name}: got labels {sorted(labels)}, declared "
+                f"{sorted(self.label_names)}")
+        return tuple(str(labels[k]) for k in self.label_names)
+
+    def value(self, **labels) -> float:
+        """Current value of one series (0.0 if never touched)."""
+        return self._series.get(self._key(labels), 0.0)
+
+    @property
+    def total(self) -> float:
+        """Sum over every series of this instrument."""
+        return sum(self._series.values())
+
+    def series(self) -> Iterator[Tuple[str, float]]:
+        """Yields ``(suffix, value)`` — suffix is ``{k="v",...}`` or ''."""
+        for key in sorted(self._series):
+            yield _fmt_labels(self.label_names, key), self._series[key]
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (events, tokens, seconds of work)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"{self.name}: counters only go up (inc {amount})")
+        key = self._key(labels)
+        self._series[key] = self._series.get(key, 0.0) + amount
+
+
+class Gauge(_Metric):
+    """Point-in-time value (queue depth, free pages, current loss scale)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        self._series[self._key(labels)] = float(value)
+
+    def set_max(self, value: float, **labels) -> None:
+        """Ratchet upward only — high-watermark gauges."""
+        key = self._key(labels)
+        self._series[key] = max(self._series.get(key, float(value)),
+                                float(value))
+
+
+class Histogram(_Metric):
+    """Log2-bucketed histogram: bucket upper edges are ``2**e`` for
+    ``e`` in ``[lo_exp, hi_exp]`` plus a final ``+Inf`` bucket.
+
+    An observation ``v`` lands in the first bucket whose edge satisfies
+    ``v <= edge`` (Prometheus ``le`` semantics); ``v <= 0`` lands in the
+    lowest bucket (log2 of a non-positive latency is meaningless — they
+    are clamped, not dropped, so ``count``/``sum`` stay exact).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = (),
+                 lo_exp: int = -20, hi_exp: int = 4):
+        super().__init__(name, help, labels)
+        if hi_exp < lo_exp:
+            raise ValueError(f"hi_exp {hi_exp} < lo_exp {lo_exp}")
+        self.edges: Tuple[float, ...] = tuple(
+            2.0 ** e for e in range(lo_exp, hi_exp + 1)) + (_INF,)
+        self._lo_exp = lo_exp
+        self._buckets: Dict[Tuple[str, ...], List[int]] = {}
+        self._sums: Dict[Tuple[str, ...], float] = {}
+
+    def bucket_index(self, value: float) -> int:
+        """Index of the bucket ``value`` falls into (``v <= edge``)."""
+        if value <= self.edges[0]:
+            return 0
+        if value > self.edges[-2]:
+            return len(self.edges) - 1
+        # ceil(log2(v)) relative to the lowest edge, exact on powers of 2
+        idx = int(math.ceil(math.log2(value))) - self._lo_exp
+        # float log2 can land one off at the boundary — nudge to the
+        # first edge actually covering the value
+        while idx > 0 and value <= self.edges[idx - 1]:
+            idx -= 1
+        while value > self.edges[idx]:
+            idx += 1
+        return idx
+
+    def observe(self, value: float, **labels) -> None:
+        key = self._key(labels)
+        if key not in self._buckets:
+            self._buckets[key] = [0] * len(self.edges)
+            self._sums[key] = 0.0
+            self._series[key] = 0.0
+        self._buckets[key][self.bucket_index(value)] += 1
+        self._sums[key] += value
+        self._series[key] += 1          # _series holds the count
+
+    def count(self, **labels) -> int:
+        return int(self._series.get(self._key(labels), 0))
+
+    def sum(self, **labels) -> float:
+        return self._sums.get(self._key(labels), 0.0)
+
+    def buckets(self, **labels) -> List[Tuple[float, int]]:
+        """``(le_edge, cumulative_count)`` pairs for one series."""
+        raw = self._buckets.get(self._key(labels))
+        if raw is None:
+            return [(e, 0) for e in self.edges]
+        out, cum = [], 0
+        for edge, n in zip(self.edges, raw):
+            cum += n
+            out.append((edge, cum))
+        return out
+
+
+class Registry:
+    """A named set of instruments with dict / Prometheus / JSON exports."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get_or_create(self, cls, name, help, labels, **kw) -> _Metric:
+        existing = self._metrics.get(name)
+        if existing is not None:
+            if (type(existing) is not cls
+                    or existing.label_names != tuple(labels)):
+                raise ValueError(
+                    f"metric {name!r} already registered as "
+                    f"{existing.kind} with labels {existing.label_names}")
+            return existing
+        m = cls(name, help, labels, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (), lo_exp: int = -20,
+                  hi_exp: int = 4) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   lo_exp=lo_exp, hi_exp=hi_exp)
+
+    def metrics(self) -> List[_Metric]:
+        return list(self._metrics.values())
+
+    # -- exports ------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat ``{series_name: value}`` — histograms expand to
+        ``name_count`` / ``name_sum`` / ``name_bucket{le="..."}``."""
+        out: Dict[str, float] = {}
+        for m in self._metrics.values():
+            if isinstance(m, Histogram):
+                for key in sorted(m._series):
+                    suffix = _fmt_labels(m.label_names, key)
+                    out[f"{m.name}_count{suffix}"] = float(m._series[key])
+                    out[f"{m.name}_sum{suffix}"] = m._sums[key]
+                    cum = 0
+                    for edge, n in zip(m.edges, m._buckets[key]):
+                        cum += n
+                        names = m.label_names + ("le",)
+                        sfx = _fmt_labels(names, key + (_fmt_value(edge),))
+                        out[f"{m.name}_bucket{sfx}"] = float(cum)
+            else:
+                for suffix, value in m.series():
+                    out[f"{m.name}{suffix}"] = value
+        return out
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition format (the ``.prom`` artifact)."""
+        lines: List[str] = []
+        for m in self._metrics.values():
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            if isinstance(m, Histogram):
+                for key in sorted(m._series):
+                    lbl = dict(zip(m.label_names, key))
+                    cum = 0
+                    for edge, n in zip(m.edges, m._buckets[key]):
+                        cum += n
+                        names = m.label_names + ("le",)
+                        sfx = _fmt_labels(names, key + (_fmt_value(edge),))
+                        lines.append(f"{m.name}_bucket{sfx} {cum}")
+                    sfx = _fmt_labels(m.label_names, key)
+                    lines.append(
+                        f"{m.name}_sum{sfx} {_fmt_value(m._sums[key])}")
+                    lines.append(f"{m.name}_count{sfx} {cum}")
+            else:
+                for suffix, value in m.series():
+                    lines.append(f"{m.name}{suffix} {_fmt_value(value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def json_dump(self, path: Optional[str] = None) -> str:
+        """JSON of :meth:`snapshot` (written to ``path`` when given)."""
+        text = json.dumps(self.snapshot(), indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def merged_snapshot(*registries: Registry) -> Dict[str, float]:
+    """Union of several registries' snapshots (engine + stats exports)."""
+    out: Dict[str, float] = {}
+    for r in registries:
+        out.update(r.snapshot())
+    return out
+
+
+def merged_prometheus(*registries: Registry) -> str:
+    """Concatenated text exposition of several registries."""
+    return "".join(r.prometheus() for r in registries)

@@ -1,0 +1,193 @@
+"""Span/event tracer exporting Chrome trace-event JSON (Perfetto-loadable).
+
+Dependency-free, host-side, bounded.  The engine and trainer record spans
+*around* their device steps — the tracer never touches a device array, so
+enabling it adds zero device syncs to the hot path (pinned by a test).
+
+Model:
+
+- a :class:`Tracer` holds a ring buffer (``collections.deque(maxlen=...)``)
+  of trace events — a runaway serve session overwrites its oldest events
+  instead of growing without bound;
+- the clock is injectable (``Tracer(clock=...)``) so tests can drive
+  deterministic timelines; timestamps are microseconds relative to tracer
+  construction (Chrome trace ``ts``);
+- **spans** are "X" (complete) events with ``ts`` + ``dur`` — emitted on
+  exit, so they nest exactly (a child's end is measured before its
+  parent's);  **instants** are "i" events; ``thread_name`` metadata ("M")
+  labels the per-``tid`` tracks.
+
+Track convention used by :class:`repro.serve.engine.ServeEngine`:
+
+- ``tid 0`` ("engine") carries the per-tick phases — ``tick`` wrapping
+  ``admit`` / ``plan`` / ``device step`` / ``host sync`` / ``commit``;
+- ``tid 1 + slot`` ("slot N") carries that slot's request lifecycle:
+  ``submit``/``admit`` instants, one ``prefill`` span per chunk, one
+  ``decode`` span per (speculative) window with
+  ``{rid, tokens, drafts, accepted}`` args, ``truncate`` instants when a
+  window's tail is rejected, and a ``retire`` instant.
+
+Load the exported file in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing``: a serve session renders as one timeline per slot
+over the engine-phase track.
+
+:func:`validate_chrome_trace` checks the schema the CI artifact relies on
+(every event has ``ph``/``ts``/``pid``/``tid``; spans nest within a
+track) without needing a browser; :func:`profiler_trace` is the optional
+``jax.profiler`` hook — a context manager that brackets a run with
+``start_trace``/``stop_trace`` when given a directory and is a no-op
+otherwise.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Dict, Iterable, List, Optional, Union
+
+
+class Tracer:
+    """Bounded ring-buffer trace recorder with an injectable clock."""
+
+    def __init__(self, clock=time.perf_counter, max_events: int = 65536,
+                 pid: int = 0, process_name: str = "repro"):
+        if max_events < 1:
+            raise ValueError(f"max_events must be >= 1: {max_events}")
+        self._clock = clock
+        self._t0 = clock()
+        self.pid = pid
+        self.events: deque = deque(maxlen=max_events)
+        # metadata events live outside the ring buffer: a long session
+        # must not evict its track names
+        self._meta: List[dict] = [{
+            "ph": "M", "ts": 0.0, "pid": pid, "tid": 0,
+            "name": "process_name", "args": {"name": process_name}}]
+        self._named_tids: set = set()
+
+    # -- recording ----------------------------------------------------------
+
+    def now_us(self) -> float:
+        """Microseconds since tracer construction (trace ``ts`` units)."""
+        return (self._clock() - self._t0) * 1e6
+
+    def thread_name(self, tid: int, name: str) -> None:
+        """Label a track (idempotent per tid)."""
+        if tid in self._named_tids:
+            return
+        self._named_tids.add(tid)
+        self._meta.append({"ph": "M", "ts": 0.0, "pid": self.pid,
+                           "tid": tid, "name": "thread_name",
+                           "args": {"name": name}})
+
+    def instant(self, name: str, tid: int = 0, **args) -> None:
+        """A zero-duration marker ("i" event, thread scope)."""
+        self.events.append({"ph": "i", "ts": self.now_us(), "pid": self.pid,
+                            "tid": tid, "name": name, "s": "t",
+                            "args": args})
+
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 tid: int = 0, args: Optional[dict] = None) -> None:
+        """An explicit "X" span — for spans whose interval is known after
+        the fact (e.g. per-slot windows sharing the device-step interval).
+        """
+        self.events.append({"ph": "X", "ts": ts_us, "pid": self.pid,
+                            "tid": tid, "name": name,
+                            "dur": max(dur_us, 0.0), "args": args or {}})
+
+    @contextmanager
+    def span(self, name: str, tid: int = 0, **args):
+        """Context-managed "X" span; emitted on exit so children are
+        recorded (and end) before their parent."""
+        t0 = self.now_us()
+        try:
+            yield
+        finally:
+            self.complete(name, t0, self.now_us() - t0, tid=tid, args=args)
+
+    def counter(self, name: str, values: Dict[str, float],
+                tid: int = 0) -> None:
+        """A "C" counter sample (renders as a stacked area track)."""
+        self.events.append({"ph": "C", "ts": self.now_us(), "pid": self.pid,
+                            "tid": tid, "name": name, "args": dict(values)})
+
+    # -- export -------------------------------------------------------------
+
+    def chrome_trace(self) -> dict:
+        """The Chrome trace-event JSON object (``traceEvents`` form)."""
+        return {"traceEvents": self._meta + list(self.events),
+                "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> None:
+        """Write the trace JSON (open in Perfetto / chrome://tracing)."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+
+def validate_chrome_trace(
+        trace: Union[dict, Iterable[dict]]) -> List[dict]:
+    """Validate trace-event schema; returns the event list.
+
+    Checks the invariants the CI artifact consumers rely on:
+
+    - every event carries ``ph``, ``ts``, ``pid``, ``tid`` and ``name``;
+    - "X" events carry a non-negative ``dur``;
+    - within each ``(pid, tid)`` track, "X" spans strictly nest — no
+      partial overlap (guaranteed by construction: a ``span()`` is
+      emitted on exit, after every child has ended).
+
+    Raises ``ValueError`` naming the first offending event.
+    """
+    if isinstance(trace, dict):
+        events = trace.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("trace object has no traceEvents list")
+    else:
+        events = list(trace)
+    tracks: Dict[tuple, List[dict]] = {}
+    for i, ev in enumerate(events):
+        for field in ("ph", "ts", "pid", "tid", "name"):
+            if field not in ev:
+                raise ValueError(f"event {i} ({ev.get('name')!r}) missing "
+                                 f"required field {field!r}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if dur is None or dur < 0:
+                raise ValueError(
+                    f"event {i} ({ev['name']!r}): X event needs dur >= 0")
+            tracks.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+    for (pid, tid), spans in tracks.items():
+        # sort children-inside-parents: by start, widest first on ties
+        spans.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack: List[dict] = []
+        for ev in spans:
+            end = ev["ts"] + ev["dur"]
+            while stack and ev["ts"] >= stack[-1]["ts"] + stack[-1]["dur"]:
+                stack.pop()
+            if stack and end > stack[-1]["ts"] + stack[-1]["dur"]:
+                raise ValueError(
+                    f"track (pid={pid}, tid={tid}): span "
+                    f"{ev['name']!r} [{ev['ts']}, {end}] partially "
+                    f"overlaps {stack[-1]['name']!r} — spans must nest")
+            stack.append(ev)
+    return events
+
+
+@contextmanager
+def profiler_trace(trace_dir: Optional[str] = None):
+    """Optional ``jax.profiler`` hook: bracket a run with a device-level
+    trace when ``trace_dir`` is set; exact no-op when ``None``.
+
+    The resulting TensorBoard/Perfetto trace carries the *device* view
+    (kernel launches, transfers) that complements the host-side
+    :class:`Tracer` timeline.
+    """
+    if not trace_dir:
+        yield
+        return
+    import jax
+    jax.profiler.start_trace(trace_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

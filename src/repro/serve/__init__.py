@@ -40,7 +40,25 @@ Components:
   ``kv_dtype="i8"`` (or "f8_e4m3" / "f8_e3m4", or a ``Policy`` with a
   ``kv=`` component) selects quantized page storage
 - :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
-  throughput / occupancy / acceptance-rate / tokens-per-step stats
+  throughput / occupancy / acceptance-rate / tokens-per-step stats,
+  backed by a :class:`repro.obs.Registry` (labeled counters, gauges and
+  log2-bucketed latency histograms) so the same numbers export as a
+  Prometheus text snapshot or a JSON dump
+
+Telemetry is layered (``repro.obs``), not bolted on: the engine always
+carries a metrics registry — the scheduler reports queue depth and
+admissions, the paged cache reports pool free/used/peak pages and
+speculative truncations, :class:`EngineStats` rides its own registry so
+``engine.stats = EngineStats(n)`` still resets cleanly — and
+``engine.metrics_snapshot()`` / ``engine.prometheus()`` export both.
+Passing ``tracer=repro.obs.Tracer()`` additionally records the full
+request lifecycle (submit / admit / prefill chunks / decode windows with
+draft-accept counts / truncate / retire) and every tick's engine phases
+(admit / plan / device step / host sync / commit) as Chrome trace events;
+``tracer.export(path)`` loads in Perfetto as per-slot timelines.  All of
+it reads host state plus the two ``(B,)`` arrays each step already
+transfers — zero added device syncs (pinned by tests/test_obs.py), <3%
+tok/s (the bench's ``serving_obs_overhead_pct`` row).
 
 The speculative loop (``spec_tokens > 0``) is propose/verify/commit:
 

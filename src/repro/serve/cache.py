@@ -31,7 +31,12 @@ contract:
 
 Bookkeeping (free list, tables, per-slot lengths) is host-side numpy — it
 mutates a few ints per request, never touches the device, and stays out of
-the jitted step.  The device side is a pytree of page pools (scale
+the jitted step.  Passing a ``repro.obs`` registry makes the allocator
+observable at the same zero device cost: ``serve_pages_free`` /
+``serve_pages_used`` / ``serve_pages_used_peak`` gauges (the peak is the
+pool-sizing signal) and ``serve_truncations_total`` /
+``serve_spec_rejected_tokens_total`` counters for speculative tails
+discarded by ``truncate()``.  The device side is a pytree of page pools (scale
 sidecars riding in the same per-layer dicts, scan-stacked like the
 params) built by :func:`repro.models.transformer.init_paged_cache`; all
 layers share one table, so admission allocates pages once per sequence.
@@ -78,7 +83,8 @@ class PagedKVCache:
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  dtype=jnp.bfloat16,
-                 kv_dtype: Union[str, qfmt.KVFormat] = "bf16"):
+                 kv_dtype: Union[str, qfmt.KVFormat] = "bf16",
+                 registry=None):
         if max_seq % page_size:
             raise ValueError(f"max_seq {max_seq} must be a multiple of "
                              f"page_size {page_size}")
@@ -102,6 +108,36 @@ class PagedKVCache:
         self._committed: List[int] = [0] * n_slots
         self._written: List[int] = [0] * n_slots
         self._table_device = None        # invalidated on alloc/free
+        # telemetry (repro.obs): page-pool occupancy gauges + a
+        # high-watermark, and the speculative rejected-tail counter.
+        # All host-side ints — the allocator never touches the device, so
+        # neither does its instrumentation.  None = uninstrumented.
+        self._free_gauge = self._used_gauge = self._peak_gauge = None
+        self._truncations = self._rejected_tokens = None
+        if registry is not None:
+            self._free_gauge = registry.gauge(
+                "serve_pages_free", "free pages in the shared pool")
+            self._used_gauge = registry.gauge(
+                "serve_pages_used", "pages held by admitted slots")
+            self._peak_gauge = registry.gauge(
+                "serve_pages_used_peak",
+                "high-watermark of pages held (pool sizing signal)")
+            self._truncations = registry.counter(
+                "serve_truncations_total",
+                "truncate() calls that discarded written positions")
+            self._rejected_tokens = registry.counter(
+                "serve_spec_rejected_tokens_total",
+                "speculative window positions rolled back by truncate()")
+            self._free_gauge.set(self.num_pages)
+            self._used_gauge.set(0)
+            self._peak_gauge.set(0)
+
+    def _update_pool_gauges(self) -> None:
+        if self._free_gauge is not None:
+            used = self.used_pages
+            self._free_gauge.set(len(self._free))
+            self._used_gauge.set(used)
+            self._peak_gauge.set_max(used)
 
     # -- allocation ---------------------------------------------------------
 
@@ -129,6 +165,7 @@ class PagedKVCache:
         self._committed[slot] = 0
         self._written[slot] = 0
         self._table_device = None
+        self._update_pool_gauges()
         return True
 
     def retire(self, slot: int) -> None:
@@ -139,6 +176,7 @@ class PagedKVCache:
         self._committed[slot] = 0
         self._written[slot] = 0
         self._table_device = None
+        self._update_pool_gauges()
 
     # -- length bookkeeping (speculative windows) ---------------------------
 
@@ -182,6 +220,10 @@ class PagedKVCache:
             raise RuntimeError(
                 f"slot {slot}: truncate to {new_len} beyond written "
                 f"watermark {self._written[slot]}")
+        rejected = self._written[slot] - new_len
+        if rejected and self._truncations is not None:
+            self._truncations.inc()
+            self._rejected_tokens.inc(rejected)
         self._committed[slot] = new_len
         self._written[slot] = new_len
 

@@ -41,6 +41,24 @@ accepts the format name, a :class:`~repro.quant.KVFormat`, or a
 :class:`~repro.core.policy.Policy` (its ``kv=`` component), so
 ``ServeEngine(cfg, params, kv_dtype=Policy.parse("p=f32,c=bf16,o=bf16,
 kv=i8"))`` threads one policy string end to end.
+
+Telemetry (``repro.obs``): the engine always carries a metrics
+:class:`~repro.obs.Registry` — the scheduler reports queue depth and
+admissions, the paged cache reports pool free/used/peak pages and
+speculative truncations, and :class:`EngineStats` rides its own registry
+(reset with ``engine.stats``) — export both with
+:meth:`metrics_snapshot` / :meth:`prometheus`.  Passing a
+:class:`~repro.obs.Tracer` additionally records every tick's phase spans
+(``admit`` / ``plan`` / ``device step`` / ``host sync`` / ``commit`` on
+the ``engine`` track) and each slot's request lifecycle (``submit`` /
+``admit`` instants, ``prefill`` chunk spans, ``decode`` window spans
+carrying ``{rid, tokens, drafts, accepted}``, ``truncate`` on rejected
+tails, ``retire``) as Chrome trace events — ``tracer.export(path)`` then
+loads in Perfetto as a per-slot timeline.  All instrumentation reads
+host state and the two ``(B,)`` arrays the step already transfers
+(``accept`` / ``token``): tracing adds **zero device syncs** to
+``step()`` (pinned by tests/test_obs.py) and <3% tok/s on the bench
+workload (``serving_obs_overhead_pct``).
 """
 from __future__ import annotations
 
@@ -55,6 +73,8 @@ import numpy as np
 from repro import quant
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
+from repro.obs.registry import Registry, merged_prometheus, merged_snapshot
+from repro.obs.trace import Tracer
 from repro.serve.cache import PagedKVCache
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.propose import NGramProposer, Proposer
@@ -62,6 +82,13 @@ from repro.serve.sampling import SamplingParams, make_verifier
 from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
 
 PyTree = Any
+
+#: tracer track ids: tid 0 is the engine-phase track, slot b is 1 + b
+TID_ENGINE = 0
+
+
+def _slot_tid(slot_id: int) -> int:
+    return 1 + slot_id
 
 
 @dataclasses.dataclass
@@ -95,11 +122,22 @@ class ServeEngine:
                  spec_tokens: int = 0,
                  proposer: Optional[Proposer] = None,
                  use_kernel: bool = False, pages_per_block: int = 1,
-                 kv_dtype="bf16", seed: int = 0):
+                 kv_dtype="bf16", seed: int = 0,
+                 registry: Optional[Registry] = None,
+                 tracer: Optional[Tracer] = None):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} does not support decode")
         self.cfg = cfg
         self.params = params
+        # engine-level telemetry is always on (host ints, zero device
+        # cost); the tracer is opt-in.  EngineStats keeps a *separate*
+        # registry so `engine.stats = EngineStats(n)` resets cleanly.
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.thread_name(TID_ENGINE, "engine")
+            for b in range(n_slots):
+                tracer.thread_name(_slot_tid(b), f"slot {b}")
         if hasattr(kv_dtype, "kv_dtype"):     # a core.policy.Policy
             kv_dtype = kv_dtype.kv_dtype
         self.kv_format = quant.resolve(kv_dtype)
@@ -114,11 +152,13 @@ class ServeEngine:
         self.proposer = proposer
         self.cache = PagedKVCache(cfg, n_slots, max_seq,
                                   page_size=page_size, num_pages=num_pages,
-                                  kv_dtype=self.kv_format)
+                                  kv_dtype=self.kv_format,
+                                  registry=self.registry)
         self.scheduler = Scheduler(self.cache, chunk_size=chunk_size,
                                    max_batched_tokens=max_batched_tokens,
                                    spec_tokens=self.spec_tokens,
-                                   proposer=self.proposer)
+                                   proposer=self.proposer,
+                                   registry=self.registry)
         self.sampling = sampling
         self.stats = EngineStats(n_slots)
         self._key = jax.random.key(seed)
@@ -126,6 +166,9 @@ class ServeEngine:
         self._inflight: dict[int, RequestMetrics] = {}
         self._results: List[RequestResult] = []
         self._result_ids: set[int] = set()   # finished, kept for drain()
+        # drain()'s no-progress guard reads these per-tick flags
+        self._last_tick_admitted = False
+        self._last_tick_stepped = False
 
         verifier = make_verifier(sampling)
 
@@ -176,14 +219,36 @@ class ServeEngine:
         self._inflight[rid] = RequestMetrics(
             request_id=rid, prompt_len=len(prompt),
             submit_time=time.perf_counter())
+        if self.tracer is not None:
+            self.tracer.instant("submit", tid=TID_ENGINE, rid=rid,
+                                prompt_len=len(prompt), max_new=max_new)
         return rid
 
     def step(self) -> List[RequestResult]:
-        """One scheduler tick.  Returns requests that finished this step."""
-        self.scheduler.admit()
-        if self.scheduler.busy_slots == 0:
-            return []
+        """One scheduler tick.  Returns requests that finished this step.
+
+        ``EngineStats.elapsed`` covers the **full** tick — admission
+        through commit — so host-side scheduler work is charged to the
+        step it belongs to and ``tok_per_s`` cannot flatter the engine by
+        excluding it (regression-tested against ``drain()`` wall time).
+        """
+        tr = self.tracer
         t0 = time.perf_counter()
+        tick_us = tr.now_us() if tr is not None else 0.0
+        admitted = self.scheduler.admit()
+        self._last_tick_admitted = bool(admitted)
+        if tr is not None:
+            t_admit = tr.now_us()
+            tr.complete("admit", tick_us, t_admit - tick_us,
+                        tid=TID_ENGINE, args={"admitted": list(admitted)})
+            for rid in admitted:
+                tr.instant("admit", tid=TID_ENGINE, rid=rid)
+        if self.scheduler.busy_slots == 0:
+            self._last_tick_stepped = False
+            return []
+        self._last_tick_stepped = True
+        if tr is not None:
+            plan_us = tr.now_us()
         plan = self.scheduler.plan()
         if self.sampling.is_greedy:
             key = self._key
@@ -191,14 +256,27 @@ class ServeEngine:
             self._key, key = jax.random.split(self._key)
         slot_rids = [None if s is None else s.req.request_id
                      for s in self.scheduler.slots]
+        if tr is not None:
+            dev_us = tr.now_us()
+            tr.complete("plan", plan_us, dev_us - plan_us, tid=TID_ENGINE,
+                        args={"kind": plan.kind, "tokens": plan.n_tokens,
+                              "drafts": plan.n_draft})
         accept, token, self.cache.pages = self._device_step(
             self.params, self.cache.pages, self.cache.table_device(),
             jnp.asarray(plan.tokens), jnp.asarray(plan.start),
             jnp.asarray(plan.valid), jnp.asarray(plan.logit_idx),
             jnp.asarray(plan.draft), jnp.asarray(plan.draft_len), key)
+        if tr is not None:
+            sync_us = tr.now_us()
+            tr.complete("device step", dev_us, sync_us - dev_us,
+                        tid=TID_ENGINE, args={"kind": plan.kind})
         accept = np.asarray(accept)                   # blocks on the device
         token = np.asarray(token)
         now = time.perf_counter()
+        if tr is not None:
+            commit_us = tr.now_us()
+            tr.complete("host sync", sync_us, commit_us - sync_us,
+                        tid=TID_ENGINE)
 
         # per-request speculation accounting, against the pre-commit
         # slot->request mapping (commit retires finished slots)
@@ -230,9 +308,20 @@ class ServeEngine:
             self.stats.record_finish(rm)
             results.append(RequestResult(slot.req.request_id,
                                          slot.req.prompt, slot.out, rm))
+        if tr is not None:
+            end_us = tr.now_us()
+            tr.complete("commit", commit_us, end_us - commit_us,
+                        tid=TID_ENGINE,
+                        args={"emitted": outcome.n_tokens,
+                              "finished": len(outcome.finished)})
+            tr.complete("tick", tick_us, end_us - tick_us, tid=TID_ENGINE,
+                        args={"kind": plan.kind})
+            self._trace_slots(plan, slot_rids, accept, outcome,
+                              dev_us, sync_us)
+        t_end = time.perf_counter()
         self.stats.record_step(
             plan.kind, self.scheduler.busy_slots + len(outcome.finished),
-            outcome.n_tokens, now - t0,
+            outcome.n_tokens, t_end - t0,
             prefill_tokens=np.where(plan.kinds == PREFILL, plan.valid, 0),
             decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0),
             proposed=plan.n_draft,
@@ -240,8 +329,80 @@ class ServeEngine:
         self._results.extend(results)
         return results
 
+    def _trace_slots(self, plan, slot_rids, accept, outcome,
+                     dev_us: float, sync_us: float) -> None:
+        """Per-slot lifecycle events for one tick.
+
+        Each live slot gets an "X" span over the device-step interval on
+        its own track (Perfetto renders a per-slot timeline); decode
+        spans carry the window's draft/accept counts, rejected tails get
+        a ``truncate`` instant, retiring slots a ``retire`` instant.
+        Reads only the host-side plan and the already-transferred
+        ``accept`` array — no device access.
+        """
+        tr = self.tracer
+        dur = sync_us - dev_us
+        finished = {slot_id for slot_id, _ in outcome.finished}
+        for slot_id, rid in enumerate(slot_rids):
+            if rid is None or plan.valid[slot_id] == 0:
+                continue
+            tid = _slot_tid(slot_id)
+            if plan.kinds[slot_id] == PREFILL:
+                tr.complete("prefill", dev_us, dur, tid=tid,
+                            args={"rid": rid,
+                                  "tokens": int(plan.valid[slot_id]),
+                                  "start": int(plan.start[slot_id])})
+            else:
+                k = int(plan.draft_len[slot_id])
+                acc = int(accept[slot_id])
+                tr.complete("decode", dev_us, dur, tid=tid,
+                            args={"rid": rid,
+                                  "tokens": int(plan.valid[slot_id]),
+                                  "drafts": k, "accepted": acc})
+                if k > acc:
+                    tr.instant("truncate", tid=tid,
+                               rid=rid, rejected=k - acc)
+            if slot_id in finished:
+                tr.instant("retire", tid=tid, rid=rid)
+
     def drain(self) -> List[RequestResult]:
-        """Run until queue and slots are empty; all results, by id."""
+        """Run until queue and slots are empty; all results, by id.
+
+        Guards against the no-progress spin: if a full tick admits
+        nothing, runs no device step, and retires nothing while requests
+        are still waiting, no future tick can differ (admission is the
+        only way forward and its inputs didn't change) — raise an
+        actionable error naming the stuck requests instead of looping
+        forever.
+        """
         while self.scheduler.has_work:
+            n_results = len(self._results)
             self.step()
+            progressed = (self._last_tick_admitted
+                          or self._last_tick_stepped
+                          or len(self._results) > n_results)
+            if not progressed:
+                stuck = [r.request_id for r in self.scheduler.waiting]
+                raise RuntimeError(
+                    f"ServeEngine.drain(): no progress — tick admitted "
+                    f"nothing, stepped nothing, and retired nothing, but "
+                    f"requests {stuck} are still waiting.  The head "
+                    f"request cannot fit the page pool "
+                    f"({self.cache.free_pages} of {self.cache.num_pages} "
+                    f"pages free, {self.cache.max_pages_per_slot} max per "
+                    f"slot); submit() should have rejected it — if it "
+                    f"was enqueued by other means, resize the pool or "
+                    f"split the request.")
         return sorted(self._results, key=lambda r: r.request_id)
+
+    # -- telemetry exports --------------------------------------------------
+
+    def metrics_snapshot(self) -> dict:
+        """Flat dict over the engine registry (queue/pool/admissions)
+        and the stats registry (steps/tokens/latency histograms)."""
+        return merged_snapshot(self.registry, self.stats.registry)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of both registries (the
+        ``--metrics-out`` artifact)."""
+        return merged_prometheus(self.registry, self.stats.registry)

@@ -1,5 +1,5 @@
 """Serving metrics: per-request TTFT / tok-s, aggregate throughput, ITL,
-speculative acceptance.
+speculative acceptance — registry-backed.
 
 Host-side plain Python — recorded around the jitted steps, never inside
 them.  ``EngineStats`` aggregates per-step records (occupancy, tokens,
@@ -15,12 +15,24 @@ decoding a window's tokens arrive together, so one gap is recorded per
 request per step and **tokens per step** becomes the headline speculation
 metric: how many engine steps each generated token costs, the quantity
 the accept rate buys down.
+
+Since the ``repro.obs`` refactor the counters live in an
+:class:`repro.obs.Registry` (``serve_steps_total{kind=}``,
+``serve_new_tokens_total``, ``serve_slot_tokens_total{slot=,kind=}``,
+``serve_spec_tokens_total{which=}``, an ITL histogram, ...), so the same
+numbers export as Prometheus text or a JSON snapshot alongside the
+engine-level gauges.  The ``summary()`` dict keys are **pinned**
+(tests/test_obs.py) — they predate the registry and the bench/CI
+artifact schema keys on them; exact percentiles still come from the raw
+gap list (the histogram is the export view, log2 buckets).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional
+
+from repro.obs.registry import Registry
 
 
 @dataclasses.dataclass
@@ -69,27 +81,100 @@ def _percentile(values: List[float], q: float) -> float:
 
 
 class EngineStats:
-    """Aggregate counters the engine updates once per step / per finish."""
+    """Aggregate counters the engine updates once per step / per finish.
 
-    def __init__(self, n_slots: int):
+    Backed by a :class:`repro.obs.Registry` (fresh per instance unless
+    one is passed — resetting ``engine.stats`` must zero the counters):
+    every historical attribute (``steps``, ``prefill_steps``,
+    ``total_new_tokens``, ``slot_decode_tokens``, ...) is a view over
+    registry series, so ``stats.registry.prometheus()`` exports the same
+    numbers ``summary()`` reports.
+    """
+
+    def __init__(self, n_slots: int, registry: Optional[Registry] = None):
         self.n_slots = n_slots
-        self.steps = 0
-        self.prefill_steps = 0
-        self.decode_steps = 0
-        self.mixed_steps = 0
-        self.total_new_tokens = 0
-        self.total_prompt_tokens = 0
-        self.elapsed = 0.0
+        self.registry = registry if registry is not None else Registry()
+        r = self.registry
+        self._steps = r.counter(
+            "serve_steps_total", "engine ticks by plan kind",
+            labels=("kind",))
+        self._new_tokens = r.counter(
+            "serve_new_tokens_total", "generated tokens committed")
+        self._prompt_tokens = r.counter(
+            "serve_prompt_tokens_total", "prompt tokens of finished requests")
+        self._elapsed = r.counter(
+            "serve_elapsed_seconds_total",
+            "wall seconds across engine ticks (admit through commit)")
+        self._slot_tokens = r.counter(
+            "serve_slot_tokens_total",
+            "real tokens fed per slot, by phase", labels=("slot", "kind"))
+        self._spec = r.counter(
+            "serve_spec_tokens_total",
+            "speculative draft tokens offered to / accepted by the verifier",
+            labels=("which",))
+        self._requests = r.counter(
+            "serve_requests_finished_total", "requests retired")
+        self._occupancy = r.gauge(
+            "serve_occupancy", "busy slots / n_slots, last tick")
+        self._itl_hist = r.histogram(
+            "serve_itl_seconds", "inter-token gap (log2 buckets)",
+            lo_exp=-14, hi_exp=4)
+        self._ttft_hist = r.histogram(
+            "serve_ttft_seconds", "submit-to-first-token (log2 buckets)",
+            lo_exp=-14, hi_exp=4)
         self._occupancy_sum = 0.0
-        # per-slot token accounting: how many prompt tokens each slot fed
-        # and how many decode tokens it stepped (batch-balance diagnostics)
-        self.slot_prefill_tokens: List[int] = [0] * n_slots
-        self.slot_decode_tokens: List[int] = [0] * n_slots
-        # speculation: drafts offered to / accepted by the verify step
-        self.spec_proposed = 0
-        self.spec_accepted = 0
-        self.itl_gaps: List[float] = []     # inter-token gaps, all requests
+        self.itl_gaps: List[float] = []     # raw gaps: exact percentiles
         self.finished: List[RequestMetrics] = []
+
+    # -- registry-backed attribute views ------------------------------------
+
+    @property
+    def steps(self) -> int:
+        return int(self._steps.total)
+
+    @property
+    def prefill_steps(self) -> int:
+        return int(self._steps.value(kind="prefill"))
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._steps.value(kind="decode"))
+
+    @property
+    def mixed_steps(self) -> int:
+        return int(self._steps.value(kind="mixed"))
+
+    @property
+    def total_new_tokens(self) -> int:
+        return int(self._new_tokens.total)
+
+    @property
+    def total_prompt_tokens(self) -> int:
+        return int(self._prompt_tokens.total)
+
+    @property
+    def elapsed(self) -> float:
+        return self._elapsed.total
+
+    @property
+    def slot_prefill_tokens(self) -> List[int]:
+        return [int(self._slot_tokens.value(slot=str(b), kind="prefill"))
+                for b in range(self.n_slots)]
+
+    @property
+    def slot_decode_tokens(self) -> List[int]:
+        return [int(self._slot_tokens.value(slot=str(b), kind="decode"))
+                for b in range(self.n_slots)]
+
+    @property
+    def spec_proposed(self) -> int:
+        return int(self._spec.value(which="proposed"))
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._spec.value(which="accepted"))
+
+    # -- recording ----------------------------------------------------------
 
     def record_step(self, kind: str, busy_slots: int, new_tokens: int,
                     dt: float, prefill_tokens=None, decode_tokens=None,
@@ -99,33 +184,41 @@ class EngineStats:
         real tokens this step (a decode slot's count includes its
         speculative window); ``proposed`` / ``accepted`` are the step's
         draft-token totals."""
-        self.steps += 1
-        if kind == "prefill":
-            self.prefill_steps += 1
-        elif kind == "decode":
-            self.decode_steps += 1
-        else:
-            self.mixed_steps += 1
-        self.total_new_tokens += new_tokens
-        self.elapsed += dt
-        self._occupancy_sum += busy_slots / self.n_slots
+        self._steps.inc(kind=kind)
+        self._new_tokens.inc(new_tokens)
+        self._elapsed.inc(dt)
+        occ = busy_slots / self.n_slots
+        self._occupancy_sum += occ
+        self._occupancy.set(occ)
         if prefill_tokens is not None:
             for b, n in enumerate(prefill_tokens):
-                self.slot_prefill_tokens[b] += int(n)
+                if n:
+                    self._slot_tokens.inc(int(n), slot=str(b),
+                                          kind="prefill")
         if decode_tokens is not None:
             for b, n in enumerate(decode_tokens):
-                self.slot_decode_tokens[b] += int(n)
-        self.spec_proposed += proposed
-        self.spec_accepted += accepted
+                if n:
+                    self._slot_tokens.inc(int(n), slot=str(b),
+                                          kind="decode")
+        if proposed:
+            self._spec.inc(proposed, which="proposed")
+        if accepted:
+            self._spec.inc(accepted, which="accepted")
 
     def record_token_gap(self, gap: float) -> None:
         """One inter-token gap (seconds between consecutive tokens of a
         request, first token excluded — that interval is the TTFT)."""
         self.itl_gaps.append(gap)
+        self._itl_hist.observe(gap)
 
     def record_finish(self, rm: RequestMetrics) -> None:
         self.finished.append(rm)
-        self.total_prompt_tokens += rm.prompt_len
+        self._requests.inc()
+        self._prompt_tokens.inc(rm.prompt_len)
+        if rm.ttft is not None:
+            self._ttft_hist.observe(rm.ttft)
+
+    # -- derived ------------------------------------------------------------
 
     @property
     def mean_occupancy(self) -> float:
@@ -149,6 +242,7 @@ class EngineStats:
         return self.spec_accepted / self.spec_proposed
 
     def summary(self) -> Dict[str, float]:
+        """The pinned summary schema (pre-registry keys, verbatim)."""
         ttfts = [rm.ttft for rm in self.finished if rm.ttft is not None]
         out = {
             "requests": float(len(self.finished)),

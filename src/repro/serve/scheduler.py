@@ -152,7 +152,8 @@ class Scheduler:
     def __init__(self, cache: PagedKVCache, chunk_size: int = 32,
                  max_batched_tokens: Optional[int] = None,
                  spec_tokens: int = 0,
-                 proposer: Optional[Proposer] = None):
+                 proposer: Optional[Proposer] = None,
+                 registry=None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
         if spec_tokens < 0:
@@ -190,6 +191,19 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * self.n_slots
         self._active_ids: Set[int] = set()   # queued or in-flight
+        # telemetry (repro.obs): queue depth + admission counters, all
+        # host ints updated where the bookkeeping already mutates
+        self._queue_gauge = self._busy_gauge = None
+        self._admissions = self._submitted = None
+        if registry is not None:
+            self._queue_gauge = registry.gauge(
+                "serve_queue_depth", "requests waiting for a slot")
+            self._busy_gauge = registry.gauge(
+                "serve_busy_slots", "slots holding an active request")
+            self._admissions = registry.counter(
+                "serve_admissions_total", "requests placed into slots")
+            self._submitted = registry.counter(
+                "serve_submitted_total", "requests accepted into the queue")
 
     # -- admission / eviction -----------------------------------------------
 
@@ -211,6 +225,9 @@ class Scheduler:
                 f"{self.cache.num_pages}")
         self.waiting.append(req)
         self._active_ids.add(req.request_id)
+        if self._submitted is not None:
+            self._submitted.inc()
+            self._queue_gauge.set(len(self.waiting))
 
     def admit(self) -> List[int]:
         """Place waiting requests into free slots, FCFS.
@@ -230,6 +247,11 @@ class Scheduler:
             self.waiting.popleft()
             self.slots[slot_id] = _Slot(req)
             admitted.append(req.request_id)
+        if self._admissions is not None:
+            if admitted:
+                self._admissions.inc(len(admitted))
+            self._queue_gauge.set(len(self.waiting))
+            self._busy_gauge.set(self.busy_slots)
         return admitted
 
     def _retire(self, slot_id: int) -> _Slot:
@@ -239,6 +261,8 @@ class Scheduler:
         self._active_ids.discard(slot.req.request_id)
         if self.proposer is not None and hasattr(self.proposer, "forget"):
             self.proposer.forget(slot.req.request_id)
+        if self._busy_gauge is not None:
+            self._busy_gauge.set(self.busy_slots)
         return slot
 
     # -- planning -----------------------------------------------------------

@@ -93,8 +93,16 @@ def _accum_grads(loss_fn, scaling, policy: Policy, params, batch, k: int,
 
 
 def make_train_step(cfg: ModelConfig, run: RunConfig, optimizer,
-                    loss_fn: Callable | None = None) -> Callable:
-    """Returns ``train_step(state, batch) -> (new_state, metrics)``."""
+                    loss_fn: Callable | None = None,
+                    grad_stats: bool = False) -> Callable:
+    """Returns ``train_step(state, batch) -> (new_state, metrics)``.
+
+    ``grad_stats=True`` adds the :mod:`repro.obs.precision` per-layer
+    gradient summary (amax / nonfinite fraction / underflow fraction as
+    fixed-shape ``(L,)`` fp32 arrays) to the metrics dict — computed
+    inside the jitted step, no host callbacks, no extra syncs; layer
+    names come from :func:`repro.obs.precision.grad_layer_names`.
+    """
     policy = Policy.parse(run.policy)
     custom_loss = loss_fn is not None
     loss_fn = loss_fn or tfm.make_loss_fn(cfg, run.moe_aux_weight)
@@ -117,6 +125,14 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, optimizer,
                 compute_dtype=policy.compute_dtype)
             new_scaling, finite, (loss, metrics), grads = vag(
                 state["params"], batch)
+
+        if grad_stats:
+            # per-layer precision telemetry on the *unscaled, unclipped*
+            # fp32 grads — the magnitudes §3.3's control loop reacts to
+            from repro.obs.precision import per_layer_grad_summary
+            layer_stats = per_layer_grad_summary(grads)
+        else:
+            layer_stats = {}
 
         if run.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
@@ -146,6 +162,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, optimizer,
                        "grads_finite": finite.astype(jnp.float32),
                        "loss_scale": jnp.asarray(new_scaling.loss_scaling,
                                                  jnp.float32)}
+        out_metrics.update(layer_stats)
         for k, v in metrics.items():
             out_metrics[k] = v
         return new_state, out_metrics

@@ -14,7 +14,18 @@ The production loop every launcher entry point drives:
   relaunches and the run resumes from the last checkpoint; on restart with
   a different device count, elastic restore re-shards (see Checkpointer).
   This is the restart-based straggler/failure mitigation appropriate to
-  synchronous SPMD (DESIGN.md §5).
+  synchronous SPMD (DESIGN.md §5),
+- records **precision telemetry** (``repro.obs``): every logged step
+  feeds the loss-scale trajectory, overflow/skip counters and
+  halving/doubling events into ``trainer.precision``
+  (:class:`~repro.obs.precision.PrecisionStats` — export with
+  ``trainer.precision.snapshot()`` or
+  ``trainer.precision.registry.prometheus()``); with
+  ``tcfg.grad_stats=True`` the jitted step additionally returns per-layer
+  grad amax / nonfinite / underflow-fraction arrays (fixed shapes, no
+  host callbacks) that land in the same snapshot.  Set ``log_every=1``
+  to capture every scale transition.  ``tcfg.jax_trace_dir`` brackets
+  the run with a ``jax.profiler`` device trace.
 """
 from __future__ import annotations
 
@@ -29,9 +40,16 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, RunConfig
 from repro.data.pipeline import Prefetcher
+from repro.obs.precision import PrecisionStats, grad_layer_names
+from repro.obs.trace import profiler_trace
 from repro.sharding import rules as R
 from repro.train import state as S
 from repro.train.steps import make_train_step
+
+# metrics keys produced by per_layer_grad_summary — array-valued, routed
+# to PrecisionStats instead of the scalar history
+_PER_LAYER_KEYS = ("grad_amax_per_layer", "grad_nonfinite_frac_per_layer",
+                   "grad_underflow_frac_per_layer")
 
 PyTree = Any
 
@@ -45,6 +63,8 @@ class TrainerConfig:
     log_every: int = 10
     watchdog_s: float = 0.0        # 0 = disabled
     prefetch: int = 2
+    grad_stats: bool = False       # per-layer grad telemetry in the step
+    jax_trace_dir: Optional[str] = None   # jax.profiler trace around fit()
 
 
 class WatchdogTimeout(RuntimeError):
@@ -66,7 +86,8 @@ class Trainer:
 
         self.state_shardings = (
             S.state_shardings(cfg, run, optimizer, mesh) if mesh else None)
-        step_fn = make_train_step(cfg, run, optimizer)
+        step_fn = make_train_step(cfg, run, optimizer,
+                                  grad_stats=tcfg.grad_stats)
         if mesh is not None:
             self._step = jax.jit(step_fn,
                                  in_shardings=(self.state_shardings, None),
@@ -76,6 +97,9 @@ class Trainer:
             self._step = jax.jit(step_fn, donate_argnums=(0,))
         self.state = self._init_or_resume()
         self.metrics_history: list[dict] = []
+        self.precision = PrecisionStats()
+        self._layer_names = (grad_layer_names(self.state["params"])
+                             if tcfg.grad_stats else [])
 
     # ------------------------------------------------------------------ init
     def _init_or_resume(self) -> PyTree:
@@ -126,18 +150,29 @@ class Trainer:
         try:
             start = int(jax.device_get(self.state["step"]))
             ctx = R.axis_rules(self.mesh, self.rules)
-            with ctx:
+            with ctx, profiler_trace(self.tcfg.jax_trace_dir):
                 for step in range(start, self.tcfg.total_steps):
                     t0 = time.time()
                     batch = self.data.next_batch()
                     self.state, metrics = self._step(self.state, batch)
                     if (self.tcfg.log_every and
                             (step + 1) % self.tcfg.log_every == 0):
-                        m = {k: float(np.asarray(v))
-                             for k, v in metrics.items()}
+                        m, layers = {}, {}
+                        for k, v in metrics.items():
+                            arr = np.asarray(v)
+                            if arr.ndim == 0:
+                                m[k] = float(arr)
+                            elif k in _PER_LAYER_KEYS:
+                                layers[k] = arr
                         m["step"] = step + 1
                         m["step_time_s"] = time.time() - t0
                         self.metrics_history.append(m)
+                        self.precision.record_step(
+                            step + 1, m.get("loss_scale", 1.0),
+                            m.get("grads_finite", 1.0) >= 0.5)
+                        if layers:
+                            self.precision.record_layer_summary(
+                                self._layer_names, layers)
                         print(f"[trainer] step {step+1} "
                               f"loss={m['loss']:.4f} "
                               f"scale={m.get('loss_scale', 1):.0f} "
