@@ -48,6 +48,13 @@ drive: prefill chunks, decode windows with draft/accept counts,
 truncates, retires) and the Prometheus text snapshot of the engine's
 registries — CI archives both next to the JSON rows.
 
+The ``serving_tok_arch_{attn,ssm,rglru,hybrid}`` rows drive one config
+per layer-kind family through the same engine — the per-layer-kind state
+pool serves attention (paged KV), pure SSD and pure RG-LRU (O(1)
+per-slot recurrent state, zero pages) and the recurrentgemma-shaped
+hybrid (both at once) with identical scheduling — so the trajectory
+shows serving throughput per architecture, not just for transformers.
+
 Row names are pinned by :func:`expected_row_names` — ``run()`` refuses
 to return a row set that drifted from it, and the fast schema test in
 ``tests/test_quant.py`` pins the trajectory-critical names, so a rename
@@ -107,6 +114,7 @@ def expected_row_names() -> list:
     names += ["serving_tok_spec_base", "serving_tok_spec_spec",
               "serving_spec_accept_rate", "serving_spec_tokens_per_step"]
     names += ["serving_obs_overhead_pct"]
+    names += [f"serving_tok_arch_{label}" for label, _ in _arch_cell_cfgs()]
     return names
 
 
@@ -132,6 +140,42 @@ def _bench_cfg():
         d_ff=512, vocab_size=2048, pattern=("attn",), mlp="swiglu",
         tie_embeddings=True, remat="none",
     )
+
+
+def _arch_cell_cfgs():
+    """(label, config) per architecture family the state pool serves.
+
+    One config per layer-kind family: the dense attention bench model,
+    a mamba2-130m-shaped pure-SSD stack, a pure RG-LRU stack, and a
+    recurrentgemma-shaped (rglru, rglru, local_attn) hybrid.  Sizes match
+    the registry smoke configs so the rows price the same shapes the
+    token-identity tests pin.
+    """
+    from repro.configs.base import ModelConfig
+    ssm = ModelConfig(
+        name="serve-bench-ssm", family="ssm",
+        n_layers=3, d_model=48, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=512,
+        pattern=("ssd",), mlp="none", norm="rmsnorm",
+        ssm_state=16, ssm_headdim=24, ssm_expand=2, ssm_chunk=8,
+        conv_width=4, rope_theta=0.0, tie_embeddings=True, remat="none")
+    rglru = ModelConfig(
+        name="serve-bench-rglru", family="hybrid",
+        n_layers=3, d_model=48, n_heads=0, n_kv_heads=0,
+        d_ff=96, vocab_size=512,
+        pattern=("rglru",), mlp="geglu", norm="rmsnorm",
+        d_rnn=48, conv_width=4, rope_theta=0.0,
+        tie_embeddings=True, remat="none")
+    hybrid = ModelConfig(
+        name="serve-bench-hybrid", family="hybrid",
+        n_layers=5, d_model=48, n_heads=4, n_kv_heads=1, head_dim=12,
+        d_ff=96, vocab_size=512,
+        pattern=("rglru", "rglru", "local_attn"), window=8,
+        mlp="geglu", norm="rmsnorm", d_rnn=48, conv_width=4,
+        rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+        remat="none")
+    return [("attn", _bench_cfg()), ("ssm", ssm), ("rglru", rglru),
+            ("hybrid", hybrid)]
 
 
 def _hbm_bytes_per_decode_token(cfg, slots: int, max_seq: int,
@@ -328,6 +372,25 @@ def run(trace_path=None, metrics_path=None) -> list[tuple[str, float, str]]:
     rows.append((
         "serving_obs_overhead_pct", overhead_pct,
         f"tok_s off={tok['off']:.0f} on={tok['on']:.0f} (budget <3%)"))
+
+    # -- per-architecture throughput: one state-pool engine, every family ---
+    # attention reserves KV pages; ssm/rglru slots carry O(1) recurrent
+    # state with zero pages; the hybrid stack uses both at once.  Greedy
+    # token identity vs the dense decode() oracle is pinned by
+    # tests/test_serve_state.py — these rows price the trajectories.
+    for i, (label, acfg) in enumerate(_arch_cell_cfgs()):
+        aparams = mpx.cast_to_bfloat16(
+            T.init_params(jax.random.key(100 + i), acfg))
+        arch_prompts = [rng.integers(1, acfg.vocab_size, int(n)).tolist()
+                        for n in rng.integers(4, 12, 6)]
+        engine = serve.ServeEngine(acfg, aparams, n_slots=2, max_seq=64,
+                                   page_size=16, chunk_size=16)
+        s = _drive(engine, arch_prompts, 8)
+        kinds = ",".join(sorted(set(acfg.layer_kinds())))
+        rows.append((
+            f"serving_tok_arch_{label}", 1e6 / max(s["tok_per_s"], 1e-9),
+            f"tok_s={s['tok_per_s']:.0f} kinds={kinds} "
+            f"pages={engine.cache.num_pages}"))
     check_rows(rows)     # the CI artifact schema is pinned — fail loudly
 
     if trace_path or metrics_path:

@@ -1,15 +1,27 @@
 """Batched serving via ``repro.serve``: the engine as a thin client.
 
-Serves a small llama-style model in bf16 (weights cast once at load — the
-inference half of mixed precision) through the :class:`repro.serve.ServeEngine`
-subsystem: a paged bf16 KV-cache pool (fixed-size pages, per-sequence page
-tables, pages reserved on admit and freed on retire), true chunked prefill
-(prompts run through the model ``--chunk`` tokens at a time via the batched
-``serve_forward`` step, not token-by-token decode), continuous batching
-with mixed prefill+decode steps (finished sequences retire mid-flight,
-waiting requests are admitted the same step, and decoding sequences keep
-emitting tokens while another slot prefills — bound per-step prefill work
-with ``--max-batched-tokens``), and fp32 sampling from bf16 logits.
+Serves a model in bf16 (weights cast once at load — the inference half of
+mixed precision) through the :class:`repro.serve.ServeEngine` subsystem,
+built on the **per-layer-kind state pool**: attention layers get a paged
+KV pool (fixed-size pages, per-sequence page tables, pages reserved on
+admit and freed on retire), recurrent layers (Mamba-2 SSD, RG-LRU) get
+O(1) per-slot fp32 state — no pages at all — reset on admit.  On top of
+the pool: true chunked prefill (prompts run through the model ``--chunk``
+tokens at a time via the batched ``serve_forward`` step, not
+token-by-token decode), continuous batching with mixed prefill+decode
+steps (finished sequences retire mid-flight, waiting requests are
+admitted the same step, and decoding sequences keep emitting tokens while
+another slot prefills — bound per-step prefill work with
+``--max-batched-tokens``), and fp32 sampling from bf16 logits.
+
+``--config`` picks the model: the default llama-style ``serve-20m``, or
+any registry architecture id (``mamba2-130m``, ``recurrentgemma-9b``,
+``mixtral-8x7b``, ...) served at its smoke size — one engine, one
+scheduler, one compiled step shape across attention, SSM, hybrid and MoE
+stacks.  Greedy output is token-identical to the dense per-token
+``decode()`` oracle for every family (pinned by tests/test_serve_state.py).
+Speculative windows need the rollback only paged KV supports, so
+``--spec-tokens`` requires an attention-only config.
 
 ``--spec-tokens K`` turns every decode into a speculative
 propose/verify/commit loop:
@@ -99,6 +111,7 @@ import jax
 import numpy as np
 
 from repro import mpx, serve
+from repro.configs import registry
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.obs import Tracer
@@ -114,6 +127,12 @@ SERVE_MODEL = ModelConfig(
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", type=str, default="serve-20m",
+                    choices=["serve-20m"] + list(registry.ARCH_IDS),
+                    help="model to serve: the default dense serve-20m or "
+                         "any registry architecture (smoke-sized) — "
+                         "attention, SSM, hybrid and MoE stacks all run "
+                         "through the same state-pool engine")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4,
                     help="concurrent decode slots (batch size)")
@@ -155,7 +174,13 @@ def main():
                          "path as Prometheus text")
     args = ap.parse_args()
 
-    cfg = SERVE_MODEL
+    if args.config == "serve-20m":
+        cfg = SERVE_MODEL
+    else:
+        cfg = registry.get_smoke_config(args.config)
+        if not cfg.supports_decode():
+            ap.error(f"--config {args.config}: {cfg.family} models have "
+                     f"no decode path to serve")
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
     tracer = Tracer(process_name="repro.serve") if args.trace else None
     engine = serve.ServeEngine(

@@ -16,7 +16,9 @@ Public API (all pure functions; ``params`` is a nested dict pytree):
 - ``loss_fn(params, cfg, batch)``          -> (loss, metrics)   [MPX-ready]
 - ``abstract_cache(cfg, batch, max_seq)``  -> decode-state tree (ShapeDtype)
 - ``decode(params, cfg, cache, tokens, pos)`` -> (logits, new_cache)
-- ``init_paged_cache(cfg, n_pages, page_size)`` -> paged K/V pool tree
+- ``init_paged_cache(cfg, n_pages, page_size, n_slots=...)`` -> per-layer-kind
+  state-pool tree (paged K/V pools for attention layers; O(1) per-slot
+  recurrent state for rglru/ssd layers)
 - ``serve_forward(params, cfg, pages, table, tokens, start, valid)``
   -> (per-window-position logits (B, W, V), new_pages)
   [mixed chunked-prefill / ragged decode / speculative-verify steps,
@@ -308,9 +310,9 @@ def _block_decode(cfg: ModelConfig, kind: str, p: PyTree, st: PyTree,
     if cfg.mlp != "none":
         h = apply_norm(cfg.norm, p["mlp_norm"], x)
         if cfg.moe_experts > 0:
-            y, _ = moe_lib.moe_apply(
+            y, _ = moe_lib.moe_decode_apply(
                 p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
-                kind=cfg.mlp, capacity_factor=2.0)
+                kind=cfg.mlp)
         else:
             y = mlp_lib.mlp_apply(cfg.mlp, p["mlp"], h)
         if cfg.post_norm:
@@ -323,51 +325,95 @@ def _block_decode(cfg: ModelConfig, kind: str, p: PyTree, st: PyTree,
 # paged serving path (chunked prefill + ragged decode, repro.serve)
 # ==========================================================================
 
+_SERVABLE_KINDS = ("attn", "local_attn", "rglru", "ssd")
+_RECURRENT_KINDS = ("rglru", "ssd")
+
+
 def _require_paged_support(cfg: ModelConfig) -> None:
-    kinds = set(cfg.layer_kinds())
-    if not kinds <= {"attn", "local_attn"}:
+    bad = [k for k in cfg.layer_kinds() if k not in _SERVABLE_KINDS]
+    if bad:
         raise ValueError(
-            "paged serving supports attention-only stacks; "
-            f"{cfg.name} has layer kinds {sorted(kinds)}")
+            f"{cfg.name}: layer kind {bad[0]!r} has no serving state-pool "
+            f"implementation; the paged state pool serves attention "
+            f"(paged KV: 'attn', 'local_attn') and recurrent "
+            f"(O(1) per-slot state: 'rglru', 'ssd') layer families")
+
+
+def _pool_leaf_spec(cfg: ModelConfig, kind: str, n_pages: int,
+                    page_size: int, n_slots: int, dtype,
+                    kv_format: str) -> PyTree:
+    """Per-layer-kind state-pool leaf: paged KV or per-slot decode state."""
+    if kind in ("attn", "local_attn"):
+        return attention.paged_cache_spec(
+            n_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim,
+            dtype, kv_format=kv_format)
+    return _block_state_spec(cfg, kind, n_slots, 0, dtype)
 
 
 def abstract_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                         dtype=jnp.bfloat16,
-                         kv_format: str = "bf16") -> PyTree:
-    """Paged K/V pool stand-ins mirroring the scan/tail parameter layout.
+                         dtype=jnp.bfloat16, kv_format: str = "bf16",
+                         n_slots: int = 1) -> PyTree:
+    """Per-layer-kind state-pool stand-ins mirroring the scan/tail layout.
 
-    One (n_pages, page_size, K, D) pool pair per attention layer; scan
-    groups carry the usual stacked leading dim.  All layers share one page
-    table (each has its own pool array), so the serve scheduler allocates
-    pages once per sequence.  A quantized ``kv_format`` ("i8",
-    "f8_e4m3", "f8_e3m4" — see :mod:`repro.quant`) stores the pools in
-    the format's storage dtype and adds a (n_pages, K) fp32 amax-scale
-    sidecar pair per layer; ``dtype`` then only names the bf16
-    passthrough layout.
+    Attention layers get one (n_pages, page_size, K, D) pool pair each;
+    all of them share one page table (each has its own pool array), so the
+    serve scheduler allocates pages once per sequence.  A quantized
+    ``kv_format`` ("i8", "f8_e4m3", "f8_e3m4" — see :mod:`repro.quant`)
+    stores those pools in the format's storage dtype and adds a
+    (n_pages, K) fp32 amax-scale sidecar pair per layer; ``dtype`` then
+    only names the bf16 passthrough layout.
+
+    Recurrent layers ('rglru', 'ssd') instead carry O(1) per-slot decode
+    state — batch dim ``n_slots``, no pages, no page-table entries: the
+    RG-LRU hidden state and the SSD state accumulator stay fp32 (the MPX
+    fragile-spot policy), conv buffers ride ``dtype``.  Scan groups carry
+    the usual stacked leading dim over both kinds of leaves.
     """
     _require_paged_support(cfg)
     n_groups, rem = _layout(cfg)
-    leaf = lambda: attention.paged_cache_spec(  # noqa: E731
-        n_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
-        kv_format=kv_format)
+    leaf = lambda kind: _pool_leaf_spec(  # noqa: E731
+        cfg, kind, n_pages, page_size, n_slots, dtype, kv_format)
     cache: dict = {}
     if n_groups > 0:
-        group = {f"b{i}": leaf() for i in range(len(cfg.pattern))}
+        group = {f"b{i}": leaf(kind)
+                 for i, kind in enumerate(cfg.pattern)}
         cache["scan"] = _stack_sds(group, n_groups)
-    for j in range(len(rem)):
-        cache[f"tail{j}"] = leaf()
+    for j, kind in enumerate(rem):
+        cache[f"tail{j}"] = leaf(kind)
     return cache
 
 
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     dtype=jnp.bfloat16, kv_format: str = "bf16") -> PyTree:
+                     dtype=jnp.bfloat16, kv_format: str = "bf16",
+                     n_slots: int = 1) -> PyTree:
     # scale sidecars init to the quant SCALE_FLOOR via zeros -> floor is
     # irrelevant: zero pages dequantize to zero under any scale, and the
     # first write to a page installs a fresh amax scale
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         abstract_paged_cache(cfg, n_pages, page_size, dtype,
-                                             kv_format=kv_format),
+                                             kv_format=kv_format,
+                                             n_slots=n_slots),
                         is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def slot_state_mask(cfg: ModelConfig, kv_format: str = "bf16") -> PyTree:
+    """Bool tree matching :func:`abstract_paged_cache`'s structure: True on
+    per-slot recurrent state leaves (slot-indexed, reset on admit), False
+    on paged KV pool leaves (page-indexed, recycled by the allocator)."""
+    _require_paged_support(cfg)
+    n_groups, rem = _layout(cfg)
+    is_sds = lambda s: isinstance(s, jax.ShapeDtypeStruct)  # noqa: E731
+    leaf = lambda kind: jax.tree.map(  # noqa: E731
+        lambda _: kind in _RECURRENT_KINDS,
+        _pool_leaf_spec(cfg, kind, 1, 1, 1, jnp.bfloat16, kv_format),
+        is_leaf=is_sds)
+    mask: dict = {}
+    if n_groups > 0:
+        mask["scan"] = {f"b{i}": leaf(kind)
+                        for i, kind in enumerate(cfg.pattern)}
+    for j, kind in enumerate(rem):
+        mask[f"tail{j}"] = leaf(kind)
+    return mask
 
 
 def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
@@ -375,22 +421,32 @@ def _block_serve(cfg: ModelConfig, kind: str, p: PyTree, pages: dict,
                  page_size: int, use_kernel: bool, pages_per_block: int = 1,
                  kv_format: str = "bf16"):
     h = apply_norm(cfg.norm, p["pre_norm"], x)
-    y, pages = attention.paged_attend(
-        p["attn"], pages, page_table, h, positions, valid,
-        page_size=page_size, n_heads=cfg.n_heads,
-        window=cfg.window if kind == "local_attn" else 0,
-        cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
-        use_kernel=use_kernel, pages_per_block=pages_per_block,
-        kv_format=kv_format)
+    if kind in ("attn", "local_attn"):
+        y, pages = attention.paged_attend(
+            p["attn"], pages, page_table, h, positions, valid,
+            page_size=page_size, n_heads=cfg.n_heads,
+            window=cfg.window if kind == "local_attn" else 0,
+            cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            use_kernel=use_kernel, pages_per_block=pages_per_block,
+            kv_format=kv_format)
+    elif kind == "rglru":
+        y, pages = rglru.rglru_serve_chunk(p["rec"], h, pages, valid,
+                                           conv_width=cfg.conv_width)
+    else:  # ssd
+        y, pages = ssd.ssd_serve_chunk(p["ssd"], h, pages, valid,
+                                       n_heads=cfg.ssm_heads,
+                                       headdim=cfg.ssm_headdim,
+                                       d_state=cfg.ssm_state,
+                                       conv_width=cfg.conv_width)
     if cfg.post_norm:
         y = apply_norm(cfg.norm, p["post_mix_norm"], y)
     x = x + y
     if cfg.mlp != "none":
         h = apply_norm(cfg.norm, p["mlp_norm"], x)
         if cfg.moe_experts > 0:
-            y, _ = moe_lib.moe_apply(
+            y, _ = moe_lib.moe_decode_apply(
                 p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
-                kind=cfg.mlp, capacity_factor=2.0)
+                kind=cfg.mlp)
         else:
             y = mlp_lib.mlp_apply(cfg.mlp, p["mlp"], h)
         if cfg.post_norm:
@@ -405,7 +461,7 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
                   page_size: int, logit_idx: Optional[jnp.ndarray] = None,
                   use_kernel: bool = False, pages_per_block: int = 1,
                   kv_format: str = "bf16") -> tuple[jnp.ndarray, PyTree]:
-    """Unified serving step over a paged KV cache.
+    """Unified serving step over the per-layer-kind state pool.
 
     tokens (B, C) with per-slot chunk ``start`` positions (B,) and ``valid``
     (B,) real-token counts (0 disables a slot).  Each slot is independent:
@@ -413,6 +469,14 @@ def serve_forward(params: PyTree, cfg: ModelConfig, pages: PyTree,
     tokens (valid = 1, start = current length) and speculative decode
     windows (valid = 1 + k: the committed token plus k proposed drafts) —
     the mixed-chunk plans :mod:`repro.serve.scheduler` emits.
+
+    Attention layers scatter K/V into their paged pools and attend through
+    the shared ``page_table``; recurrent layers ('rglru', 'ssd') ignore the
+    table entirely and advance their O(1) per-slot state (batch row b IS
+    slot b) via the ``*_serve_chunk`` entry points, whose masked
+    per-position scans make padded chunk columns exact state no-ops — so
+    greedy serving stays token-identical to per-token :func:`decode`
+    across attn / ssm / rglru / hybrid stacks.
 
     Returns (logits (B, W, V), new pages): per-slot logits for the W chunk
     positions named by ``logit_idx`` (B, W) int32 — the slot's live window

@@ -122,6 +122,49 @@ def _moe_one_group(params, xf: jnp.ndarray, *, n_experts: int, top_k: int,
     return out, aux.astype(jnp.float32)
 
 
+def moe_decode_apply(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+                     kind: str = "swiglu") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Small-batch decode fast path: dense per-token expert gather.
+
+    The capacity-buffer scatter is built for prefill-sized T: it zeros and
+    scatters an (E, C, d) buffer whose cost is independent of how few
+    tokens actually flow, so at decode sizes (T = B·window, tens of
+    tokens) dispatch dominates the expert FLOPs.  It is also
+    batch-coupled — capacity drops depend on which *other* requests share
+    the step — which is wrong for serving determinism.  Here each token
+    just gathers its top-k experts' weight matrices and runs them
+    directly: exact (no drops, per-token independent), O(T·k·d·f) gathered
+    weights, affordable precisely because T is decode-sized.  Routing and
+    the combine weighting stay fp32 (same policy as ``moe_apply``); the
+    aux loss is meaningless at inference and returns 0.
+    """
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    dtype = x.dtype
+
+    def _route(xin):
+        return xin @ params["router"].astype(jnp.float32)
+
+    logits = mpx.force_full_precision(_route, None)(xf)          # (T,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, top_k)               # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    w_up = params["w_up"][expert_idx].astype(dtype)              # (T,k,d,f)
+    w_down = params["w_down"][expert_idx].astype(dtype)          # (T,k,f,d)
+    u = jnp.einsum("td,tkdf->tkf", xf, w_up)
+    if kind in ("swiglu", "geglu"):
+        gmat = jnp.einsum("td,tkdf->tkf", xf,
+                          params["w_gate"][expert_idx].astype(dtype))
+        act = jax.nn.silu(gmat) if kind == "swiglu" else jax.nn.gelu(gmat)
+        h = act * u
+    else:
+        h = jax.nn.gelu(u)
+    y = jnp.einsum("tkf,tkfd->tkd", h, w_down)
+    out = (y.astype(jnp.float32) * gate[..., None]).sum(axis=1)
+    return out.reshape(b, s, d).astype(dtype), jnp.zeros((), jnp.float32)
+
+
 def moe_apply(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
               kind: str = "swiglu", capacity_factor: float = 1.25,
               ) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -128,6 +128,45 @@ def rglru_block_apply(params, x: jnp.ndarray, *, conv_width: int = 4,
     return out, {"h": h_new, "conv": conv_state}
 
 
+def rglru_serve_chunk(params, x, state, valid, *, conv_width: int = 4):
+    """Chunked-prefill / ragged-decode serve entry point.
+
+    x (B,C,d_model); state dict(h=(B,d_rnn) fp32, conv=(B,W-1,d_rnn));
+    valid (B,) int32 — leading real positions per row.  Returns
+    (y (B,C,d_model), new_state).
+
+    A sequential per-position ``lax.scan`` executing exactly the
+    decode-branch ops (projections batched — row-wise identical matmuls;
+    conv + ``rglru_step`` sequential) so greedy serving is token-identical
+    to per-token ``decode()``.  Padded positions (>= valid) are exact
+    state no-ops via masked selects; their outputs are never gathered.
+    """
+    dtype = x.dtype
+    b, c, _ = x.shape
+    u = x @ params["w_in_x"].astype(dtype)
+    g = x @ params["w_in_gate"].astype(dtype)
+    u = shard(u, ("batch", "seq", "rnn"))
+    w, wb = params["conv_w"], params["conv_b"]
+
+    def step(carry, inp):
+        conv, h = carry
+        ut, ok = inp
+        hist = jnp.concatenate([conv, ut[:, None]], axis=1)
+        y = sum(hist[:, i] * w[i].astype(ut.dtype) for i in range(w.shape[0]))
+        y = y + wb.astype(ut.dtype)
+        h_new, h_out = rglru_step(params, h, y[:, None])
+        conv = jnp.where(ok[:, None, None], hist[:, 1:], conv)
+        h = jnp.where(ok[:, None], h_new, h)
+        return (conv, h), h_out[:, 0]
+
+    ok = jnp.arange(c)[:, None] < valid[None, :]             # (C, B)
+    (conv, h), ys = jax.lax.scan(step, (state["conv"], state["h"]),
+                                 (u.transpose(1, 0, 2), ok))
+    y = ys.transpose(1, 0, 2) * jax.nn.gelu(g)
+    out = y @ params["w_out"].astype(dtype)
+    return shard(out, ("batch", "seq", "embed")), {"h": h, "conv": conv}
+
+
 def rglru_state_spec(batch: int, d_rnn: int, conv_width: int, dtype):
     return {
         "h": jax.ShapeDtypeStruct((batch, d_rnn), jnp.float32),

@@ -185,6 +185,71 @@ def ssd_block_apply(params, xin, *, n_heads: int, headdim: int, d_state: int,
     return out, {"conv_x": cs_x, "conv_B": cs_b, "conv_C": cs_c, "ssm": ssm}
 
 
+def ssd_serve_chunk(params, xin, state, valid, *, n_heads: int, headdim: int,
+                    d_state: int, conv_width: int = 4):
+    """Chunked-prefill / ragged-decode serve entry point.
+
+    xin (B,C,d_model); state dict(conv_x/conv_B/conv_C, ssm) per slot;
+    valid (B,) int32 — how many leading positions of each row are real.
+    Returns (y (B,C,d_model), new_state).
+
+    Positions are advanced by a sequential per-position ``lax.scan`` that
+    executes exactly the decode-branch ops (projections batched — row-wise
+    identical matmuls), NOT the chunked quadratic form: the quadratic path
+    has a different bf16 summation order, and serving pins greedy token
+    identity against per-token ``decode()``.  Padded positions (>= valid)
+    produce garbage outputs (never gathered) and are exact state no-ops.
+    """
+    dtype = xin.dtype
+    b, c, _ = xin.shape
+    z = xin @ params["w_z"].astype(dtype)
+    x = xin @ params["w_x"].astype(dtype)
+    bmat = xin @ params["w_B"].astype(dtype)
+    cmat = xin @ params["w_C"].astype(dtype)
+    dt_raw = (xin @ params["w_dt"].astype(dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    x = shard(x, ("batch", "seq", "ssm_inner"))
+
+    def conv_step(w, buf, xt):
+        hist = jnp.concatenate([buf, xt[:, None]], axis=1)
+        y = sum(hist[:, i] * w[i].astype(xt.dtype) for i in range(w.shape[0]))
+        return jax.nn.silu(y), hist[:, 1:]
+
+    def keep(ok, new, old):
+        m = ok.reshape((b,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    def step(carry, inp):
+        cx, cb, cc, ssm = carry
+        xt, bt, ct, dtt, ok = inp
+        xs, cx_new = conv_step(params["conv_x"], cx, xt)
+        bs, cb_new = conv_step(params["conv_B"], cb, bt)
+        cs, cc_new = conv_step(params["conv_C"], cc, ct)
+        xh = xs.reshape(b, n_heads, headdim)
+        da = jnp.exp(dtt * a)
+        ssm_new = ssm * da[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", dtt[..., None].astype(dtype) * xh,
+            bs).astype(jnp.float32)
+        y = jnp.einsum("bn,bhpn->bhp", cs, ssm_new.astype(dtype))
+        y = y + params["D"].astype(dtype)[None, :, None] * xh
+        carry = (keep(ok, cx_new, cx), keep(ok, cb_new, cb),
+                 keep(ok, cc_new, cc), keep(ok, ssm_new, ssm))
+        return carry, y
+
+    ok = jnp.arange(c)[:, None] < valid[None, :]             # (C, B)
+    init = (state["conv_x"], state["conv_B"], state["conv_C"], state["ssm"])
+    (cx, cb, cc, ssm), ys = jax.lax.scan(
+        step, init,
+        (x.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+         cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2), ok))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, c, n_heads * headdim)
+    y = _gated_rmsnorm(params["norm_w"], y, z)
+    out = y @ params["w_out"].astype(dtype)
+    return (shard(out, ("batch", "seq", "embed")),
+            {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": ssm})
+
+
 def ssd_state_spec(batch: int, d_inner: int, d_state: int, n_heads: int,
                    headdim: int, conv_width: int, dtype):
     return {

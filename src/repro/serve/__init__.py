@@ -1,25 +1,38 @@
-"""repro.serve — mixed-precision inference engine with speculative decode
-and sub-bf16 quantized KV-cache storage.
+"""repro.serve — mixed-precision inference engine: one continuous-batching
+ServeEngine for attention, SSM, RG-LRU, hybrid and MoE stacks, with
+speculative decode and sub-bf16 quantized KV-cache storage.
 
-The serving half of the MPX discipline as a subsystem: bf16 weights on
-the hot path, the KV cache stored at whatever precision the ``kv_dtype``
-policy names (bf16 passthrough, or int8 / fp8 pages with per-page amax
-scales — ``repro.quant``), fp32 only where precision matters (softmax
-inside the model, sampling and speculative verification here).  The
-quantized page-pool contract is write-quantize / read-dequantize: every
-chunk's K/V is quantized as it is scattered into the pages (the touched
-pages are requantized against a fresh amax, scales ride a small fp32
-sidecar pool), and the paged-attention kernel multiplies the scales back
-onto K/V blocks in VMEM before the score/output matmuls — decode streams
-the cache at 1 byte/element and a dense bf16 image of it never exists.
-Components:
+The serving half of the MPX discipline as a subsystem, organized around a
+**per-layer-kind state pool** (:class:`PagedStatePool`, née
+:class:`PagedKVCache` — both names work): every layer kind gets the
+decode state its math wants, managed by one host allocator and one
+scheduler.  Attention layers ('attn', 'local_attn') get paged KV pools —
+fixed-size pages, per-slot page tables, pages reserved on admit / freed
+on retire, stored at whatever precision the ``kv_dtype`` policy names
+(bf16 passthrough, or int8 / fp8 pages with per-page amax scales —
+``repro.quant``).  Recurrent layers ('rglru', 'ssd') get O(1) per-slot
+state instead — the RG-LRU hidden vector and the Mamba-2 SSD state
+accumulator, pinned fp32 per the MPX fragile-spot policy (recurrences
+compound rounding), plus compute-dtype conv buffers — no pages, no
+page-table entries, zeroed on admit so slot reuse can't leak state.
+fp32 appears only where precision matters (softmax and recurrent
+gates/decays inside the model, sampling and speculative verification
+here).  The quantized page-pool contract is write-quantize /
+read-dequantize: every chunk's K/V is quantized as it is scattered into
+the pages (the touched pages are requantized against a fresh amax,
+scales ride a small fp32 sidecar pool), and the paged-attention kernel
+multiplies the scales back onto K/V blocks in VMEM before the
+score/output matmuls — decode streams the cache at 1 byte/element and a
+dense bf16 image of it never exists.  Components:
 
-- :mod:`~repro.serve.cache`     — paged KV-cache pool (fixed-size
-  pages, per-sequence page tables, alloc on admit / free on retire,
-  optional quantized storage with the scale sidecar, and
-  committed/written length watermarks so speculative windows can write
-  KV ahead and ``truncate()`` back to the accepted prefix with the
-  invariants still checkable)
+- :mod:`~repro.serve.cache`     — the per-layer-kind state pool: paged
+  KV sub-pools for attention layers (fixed-size pages, per-sequence
+  page tables, alloc on admit / free on retire, optional quantized
+  storage with the scale sidecar, and committed/written length
+  watermarks so speculative windows can write KV ahead and
+  ``truncate()`` back to the accepted prefix with the invariants still
+  checkable) and slot-indexed recurrent state for rglru/ssd layers
+  (init-reset on admit; ``check_invariants`` catches stale-state leaks)
 - :mod:`~repro.serve.scheduler` — continuous batching with *mixed*
   prefill+decode chunk steps: every tick each active slot contributes
   either its next prefill chunk or its decode window under a per-step
@@ -33,12 +46,18 @@ Components:
   :func:`rejection_sample` for window verification
 - :mod:`~repro.serve.engine`    — the :class:`ServeEngine` facade
   (``submit()`` / ``step()`` / ``drain()``), one compiled ``(B, chunk)``
-  step shape for prefill, decode, mixed and speculative plans alike;
-  with ``use_kernel=True`` every step runs attention through the native
+  step shape for prefill, decode, mixed and speculative plans alike,
+  serving any registry architecture whose kinds the pool implements
+  (attn / ssm / rglru / hybrid — greedy output token-identical to the
+  dense per-token ``decode()`` oracle for each family; MoE blocks take
+  a dense per-token expert-gather fast path at decode sizes); with
+  ``use_kernel=True`` every step runs attention through the native
   paged-attention Pallas kernel, which walks the page tables in-kernel
   instead of materializing a gathered contiguous copy of each slot's KV;
   ``kv_dtype="i8"`` (or "f8_e4m3" / "f8_e3m4", or a ``Policy`` with a
-  ``kv=`` component) selects quantized page storage
+  ``kv=`` component) selects quantized page storage.  Speculative
+  windows need paged rollback, so recurrent/hybrid stacks serve with
+  ``spec_tokens=0`` (refused with an actionable error otherwise)
 - :mod:`~repro.serve.metrics`   — TTFT / inter-token latency (p50/p95) /
   throughput / occupancy / acceptance-rate / tokens-per-step stats,
   backed by a :class:`repro.obs.Registry` (labeled counters, gauges and
@@ -95,7 +114,7 @@ Quickstart::
               result.metrics.acceptance_rate)
     print(engine.stats.summary())   # incl. spec_accept_rate, tokens_per_step
 """
-from repro.serve.cache import PagedKVCache
+from repro.serve.cache import PagedKVCache, PagedStatePool
 from repro.serve.engine import RequestResult, ServeEngine
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.propose import DraftModelProposer, NGramProposer, Proposer
@@ -114,6 +133,7 @@ __all__ = [
     "EngineStats",
     "NGramProposer",
     "PagedKVCache",
+    "PagedStatePool",
     "Proposer",
     "Request",
     "RequestMetrics",

@@ -1,12 +1,31 @@
-"""Paged KV-cache pool: fixed-size pages, per-slot page tables, and
-optional sub-bf16 (int8 / fp8) page storage with a scale sidecar.
+"""Per-layer-kind paged state pool: paged KV for attention layers,
+O(1) per-slot state for recurrent layers, one host allocator for both.
 
-The monolithic ``T.init_cache`` slab commits ``n_slots * max_seq`` of KV
-HBM up front whether slots are busy or not.  The paged pool commits memory
-per *admitted request* instead: a shared pool of ``num_pages`` fixed-size
-pages per attention layer, and a page table row per slot mapping logical
-page -> physical page.  Token position ``p`` of slot ``b`` lives at
-``pages[table[b, p // page_size], p % page_size]``.
+Every layer kind gets the state layout its decode math wants:
+
+- **attention** ('attn', 'local_attn') — the paged KV pool.  The
+  monolithic ``T.init_cache`` slab commits ``n_slots * max_seq`` of KV
+  HBM up front whether slots are busy or not; the paged pool commits
+  memory per *admitted request* instead: a shared pool of ``num_pages``
+  fixed-size pages per attention layer, and a page table row per slot
+  mapping logical page -> physical page.  Token position ``p`` of slot
+  ``b`` lives at ``pages[table[b, p // page_size], p % page_size]``.
+- **recurrent** ('rglru', 'ssd') — O(1) per-slot decode state (the
+  RG-LRU hidden vector + conv buffer, the SSD state accumulator + conv
+  buffers), batch row = slot.  No pages, no page-table entries, no
+  reservation pressure on the pool: the state neither grows with
+  sequence length nor fragments, so the allocator's only job is hygiene
+  — **admitting a slot zeroes its recurrent state rows** (a jitted
+  donated ``.at[slot].set(0)``, dispatched asynchronously; no host
+  sync) so a reused slot can never leak the previous request's state.
+  Per the MPX fragile-spot policy the carried states are fp32 (the
+  recurrences compound rounding over thousands of steps); conv buffers
+  ride the compute dtype.
+
+A pure-recurrent config gets ``num_pages = 0`` — no KV pools exist and
+admission never touches the free list.  Hybrid stacks use both halves at
+once: attention layers reserve pages, recurrent layers reset their rows,
+one ``admit()`` call.
 
 **Storage precision is a policy, not a constant** (``kv_dtype``, a
 ``repro.quant`` format).  The bf16 passthrough is the PR-1..4 layout:
@@ -54,12 +73,16 @@ next window — but the committed/written watermarks make the invariant
 prefix back") explicitly checkable.  (Under a quantized ``kv_dtype`` a
 dead tail can still nudge a page's amax until it is overwritten — it
 costs precision headroom, never correctness, since attention masks by
-committed position.)
+committed position.)  Recurrent state only moves forward — there is no
+watermark to truncate back to — so speculative windows are refused at
+engine construction for recurrent/hybrid stacks (see
+:class:`~repro.serve.engine.ServeEngine`).
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Union
+from typing import Any, Dict, List, Optional, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -71,13 +94,17 @@ PyTree = Any
 
 
 class PagedKVCache:
-    """Device page pools + host allocator for ``n_slots`` decode slots.
+    """Per-layer-kind state pool + host allocator for ``n_slots`` slots.
 
-    The sentinel physical index ``num_pages`` marks unallocated table
-    entries: device-side writes through it are dropped, reads are clamped
-    and masked by sequence length.  ``kv_dtype`` selects the page storage
-    format (``repro.quant`` name or :class:`~repro.quant.KVFormat`;
-    "bf16" = passthrough, quantized formats add the scale sidecars).
+    Attention layers get device page pools; recurrent layers get
+    slot-indexed state rows (reset on admit).  The sentinel physical index
+    ``num_pages`` marks unallocated table entries: device-side writes
+    through it are dropped, reads are clamped and masked by sequence
+    length.  ``kv_dtype`` selects the KV page storage format
+    (``repro.quant`` name or :class:`~repro.quant.KVFormat`;
+    "bf16" = passthrough, quantized formats add the scale sidecars) —
+    recurrent state precision is policy-pinned (fp32 carried state),
+    not configurable here.
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
@@ -88,8 +115,15 @@ class PagedKVCache:
         if max_seq % page_size:
             raise ValueError(f"max_seq {max_seq} must be a multiple of "
                              f"page_size {page_size}")
+        self.cfg = cfg
+        self.max_seq = max_seq
+        kinds = cfg.layer_kinds()
+        self.has_paged = any(k in ("attn", "local_attn") for k in kinds)
+        self.has_recurrent = any(k in tfm._RECURRENT_KINDS for k in kinds)
         self.page_size = page_size
         self.max_pages_per_slot = max_seq // page_size
+        if not self.has_paged:
+            num_pages = 0            # page-free stack: no KV pools at all
         self.num_pages = (num_pages if num_pages is not None
                           else n_slots * self.max_pages_per_slot)
         self.n_slots = n_slots
@@ -97,7 +131,33 @@ class PagedKVCache:
         self.kv_format = qfmt.resolve(kv_dtype)
         self.pages: PyTree = tfm.init_paged_cache(
             cfg, self.num_pages, page_size, dtype,
-            kv_format=self.kv_format.name)
+            kv_format=self.kv_format.name, n_slots=n_slots)
+        # slot admission state: recurrent rows have no pages to witness
+        # occupancy, so track it explicitly.  ``_dirty`` marks slots whose
+        # recurrent state still holds a retired request's values; admit()
+        # must clear it by resetting the rows before reuse
+        # (check_invariants catches stale-state leaks).
+        self._admitted: List[bool] = [False] * n_slots
+        self._reserved: List[int] = [0] * n_slots
+        self._dirty: List[bool] = [False] * n_slots
+        self._reset_slot_state = None
+        if self.has_recurrent:
+            mask = tfm.slot_state_mask(cfg, kv_format=self.kv_format.name)
+
+            def raw_reset(pages, slot):
+                out = {}
+                for key, sub in pages.items():
+                    stacked = key == "scan"
+                    out[key] = jax.tree.map(
+                        lambda a, m, st=stacked: (
+                            (a.at[:, slot].set(jnp.zeros((), a.dtype))
+                             if st else
+                             a.at[slot].set(jnp.zeros((), a.dtype)))
+                            if m else a),
+                        sub, mask[key])
+                return out
+
+            self._reset_slot_state = jax.jit(raw_reset, donate_argnums=(0,))
         self._free: List[int] = list(range(self.num_pages))
         self._tables = np.full((n_slots, self.max_pages_per_slot),
                                self.sentinel, np.int32)
@@ -115,6 +175,13 @@ class PagedKVCache:
         self._free_gauge = self._used_gauge = self._peak_gauge = None
         self._truncations = self._rejected_tokens = None
         if registry is not None:
+            state_bytes = registry.gauge(
+                "serve_state_bytes",
+                "decode-state bytes held per layer kind "
+                "(KV page pools vs O(1) recurrent slot state)",
+                labels=("kind",))
+            for kind, nbytes in self._state_bytes_by_kind().items():
+                state_bytes.set(nbytes, kind=kind)
             self._free_gauge = registry.gauge(
                 "serve_pages_free", "free pages in the shared pool")
             self._used_gauge = registry.gauge(
@@ -139,6 +206,24 @@ class PagedKVCache:
             self._used_gauge.set(used)
             self._peak_gauge.set_max(used)
 
+    def _state_bytes_by_kind(self) -> Dict[str, int]:
+        """Device bytes of decode state held per layer kind (where decode
+        memory lives: KV page pools vs O(1) recurrent slot state)."""
+        n_groups, rem = tfm._layout(self.cfg)
+        totals: Dict[str, int] = {}
+
+        def add(kind: str, sub: PyTree) -> None:
+            nbytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                         for a in jax.tree.leaves(sub))
+            totals[kind] = totals.get(kind, 0) + nbytes
+
+        if n_groups > 0:
+            for i, kind in enumerate(self.cfg.pattern):
+                add(kind, self.pages["scan"][f"b{i}"])
+        for j, kind in enumerate(rem):
+            add(kind, self.pages[f"tail{j}"])
+        return totals
+
     # -- allocation ---------------------------------------------------------
 
     def pages_for(self, n_tokens: int) -> int:
@@ -146,33 +231,52 @@ class PagedKVCache:
         return -(-n_tokens // self.page_size)
 
     def can_admit(self, n_tokens: int) -> bool:
+        if not self.has_paged:
+            return n_tokens <= self.max_seq
         return self.pages_for(n_tokens) <= len(self._free)
 
     def admit(self, slot: int, n_tokens: int) -> bool:
-        """Reserve pages for ``n_tokens`` total tokens in ``slot``.
+        """Reserve capacity for ``n_tokens`` total tokens in ``slot``:
+        pages for the attention layers (if any), plus a zero-reset of the
+        slot's recurrent state rows (if any).
 
         Returns False (allocating nothing) if the pool or the slot's table
         row can't hold the request.
         """
-        need = self.pages_for(n_tokens)
-        if self._owned[slot]:
+        if self._admitted[slot] or self._owned[slot]:
             raise ValueError(f"slot {slot} already holds pages")
+        if n_tokens > self.max_seq:
+            return False
+        need = self.pages_for(n_tokens) if self.has_paged else 0
         if need > len(self._free) or need > self.max_pages_per_slot:
             return False
         got = [self._free.pop() for _ in range(need)]
         self._owned[slot] = got
         self._tables[slot, :need] = got
+        self._admitted[slot] = True
+        self._reserved[slot] = n_tokens
         self._committed[slot] = 0
         self._written[slot] = 0
         self._table_device = None
+        if self._reset_slot_state is not None:
+            # async jit dispatch — zeroes the slot's recurrent rows on
+            # device (donated buffers, no host transfer, no sync)
+            self.pages = self._reset_slot_state(self.pages,
+                                                jnp.int32(slot))
+            self._dirty[slot] = False
         self._update_pool_gauges()
         return True
 
     def retire(self, slot: int) -> None:
-        """Return the slot's pages to the free list."""
+        """Return the slot's pages to the free list and mark its recurrent
+        state rows stale (the next ``admit`` must reset them)."""
+        if self._admitted[slot] and self.has_recurrent:
+            self._dirty[slot] = True
         self._free.extend(self._owned[slot])
         self._owned[slot] = []
         self._tables[slot, :] = self.sentinel
+        self._admitted[slot] = False
+        self._reserved[slot] = 0
         self._committed[slot] = 0
         self._written[slot] = 0
         self._table_device = None
@@ -181,8 +285,11 @@ class PagedKVCache:
     # -- length bookkeeping (speculative windows) ---------------------------
 
     def capacity(self, slot: int) -> int:
-        """Tokens the slot's reserved pages can hold."""
-        return len(self._owned[slot]) * self.page_size
+        """Tokens the slot can hold: its reserved pages for paged stacks,
+        the admitted request's token budget for page-free ones."""
+        if self.has_paged:
+            return len(self._owned[slot]) * self.page_size
+        return self._reserved[slot]
 
     def slot_length(self, slot: int) -> int:
         """The slot's committed token count (accepted prefix)."""
@@ -264,13 +371,23 @@ class PagedKVCache:
                     f"slot {slot}: table/ownership mismatch "
                     f"(mapped {mapped}, owned {row})")
             if not (0 <= self._committed[slot] <= self._written[slot]
-                    <= len(row) * self.page_size):
+                    <= self.capacity(slot)):
                 raise RuntimeError(
                     f"slot {slot}: length invariant violated — committed "
                     f"{self._committed[slot]} <= written "
                     f"{self._written[slot]} <= capacity "
-                    f"{len(row) * self.page_size} must hold")
-            if not row and self._written[slot]:
+                    f"{self.capacity(slot)} must hold")
+            if self.has_paged and not row and self._written[slot]:
                 raise RuntimeError(
                     f"slot {slot}: nonzero written watermark "
                     f"{self._written[slot]} with no pages owned")
+            if self._admitted[slot] and self._dirty[slot]:
+                raise RuntimeError(
+                    f"slot {slot}: stale recurrent state — the slot was "
+                    f"re-admitted without resetting the previous "
+                    f"request's device state rows")
+
+
+# The class predates the per-layer-kind generalization; the name that
+# matches what it now is.  Both names are exported from repro.serve.
+PagedStatePool = PagedKVCache

@@ -1,11 +1,18 @@
 """The ServeEngine facade: submit() / step() / drain().
 
-Ties the subsystem together: the paged KV cache (device pools + host
-allocator), the mixed-chunk continuous-batching scheduler (host plans),
-ONE jitted ``(B, chunk_size)`` specialization of the unified
-``serve_forward`` step — every tick is a mixed plan in which each active
-slot contributes either a prefill chunk or its decode *window* — and fp32
-verification/sampling over each slot's window logits.
+Ties the subsystem together: the per-layer-kind paged state pool (paged
+KV pools for attention layers, O(1) per-slot fp32 state for rglru/ssd
+layers — one host allocator for both), the mixed-chunk
+continuous-batching scheduler (host plans), ONE jitted
+``(B, chunk_size)`` specialization of the unified ``serve_forward`` step
+— every tick is a mixed plan in which each active slot contributes
+either a prefill chunk or its decode *window* — and fp32
+verification/sampling over each slot's window logits.  One engine serves
+attn, ssm, rglru and hybrid stacks; greedy output is token-identical to
+the dense per-token ``decode()`` oracle for all of them.  Speculative
+windows require the rollback only paged KV supports, so recurrent and
+hybrid stacks must run with ``spec_tokens=0`` (refused with an
+actionable error at construction).
 
 Speculative decoding (``spec_tokens > 0``) turns the decode side of every
 tick into a propose/verify/commit loop: a host-side
@@ -101,7 +108,7 @@ class RequestResult:
 
 
 class ServeEngine:
-    """Mixed-precision inference engine with paged KV cache.
+    """Mixed-precision inference engine over the paged state pool.
 
     ``submit()`` enqueues requests; ``step()`` runs one scheduler tick
     (admit -> one mixed prefill+decode batch step with window
@@ -126,7 +133,12 @@ class ServeEngine:
                  registry: Optional[Registry] = None,
                  tracer: Optional[Tracer] = None):
         if not cfg.supports_decode():
-            raise ValueError(f"{cfg.name} does not support decode")
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) does not support decode — "
+                f"serving needs a causal LM stack")
+        # fail fast (and with the layer kind named) before any state is
+        # allocated, instead of a trace-time error from serve_forward
+        tfm._require_paged_support(cfg)
         self.cfg = cfg
         self.params = params
         # engine-level telemetry is always on (host ints, zero device
@@ -147,6 +159,18 @@ class ServeEngine:
                 "a proposer without spec_tokens > 0 would never be "
                 "consulted — pass spec_tokens=k to size the speculative "
                 "window")
+        recurrent = sorted(set(cfg.layer_kinds()) & {"rglru", "ssd"})
+        if self.spec_tokens > 0 and recurrent:
+            raise ValueError(
+                f"spec_tokens={self.spec_tokens}: speculative windows "
+                f"need the state layer to roll back rejected draft "
+                f"positions, and {cfg.name}'s "
+                f"{', '.join(repr(k) for k in recurrent)} layer(s) carry "
+                f"O(1) recurrent slot state that only moves forward — "
+                f"there is no written-watermark to truncate back to the "
+                f"way KV pages have.  Serve this model with "
+                f"spec_tokens=0 (snapshot-and-restore of recurrent state "
+                f"on rejection is the named follow-on).")
         if self.spec_tokens > 0 and proposer is None:
             proposer = NGramProposer()
         self.proposer = proposer

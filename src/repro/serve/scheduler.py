@@ -187,7 +187,7 @@ class Scheduler:
                 f"max_batched_tokens {max_batched_tokens} must be >= "
                 f"n_slots {self.n_slots}")
         self.max_batched_tokens = max_batched_tokens
-        self.max_seq = cache.max_pages_per_slot * cache.page_size
+        self.max_seq = cache.max_seq
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * self.n_slots
         self._active_ids: Set[int] = set()   # queued or in-flight
@@ -217,8 +217,11 @@ class Scheduler:
             raise ValueError(
                 f"request {req.request_id}: prompt {len(req.prompt)} + "
                 f"max_new {req.max_new} exceeds max_seq {self.max_seq}")
-        if self.cache.pages_for(total) > self.cache.num_pages:
-            # would never be admittable: drain() would spin forever
+        if (self.cache.has_paged
+                and self.cache.pages_for(total) > self.cache.num_pages):
+            # would never be admittable: drain() would spin forever.
+            # Page-free (pure recurrent) stacks have no pool to exhaust —
+            # the max_seq check above is the only admission bound.
             raise ValueError(
                 f"request {req.request_id}: needs "
                 f"{self.cache.pages_for(total)} pages, pool has only "

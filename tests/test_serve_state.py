@@ -1,0 +1,265 @@
+"""The per-layer-kind paged state pool: one ServeEngine for attention,
+SSM, RG-LRU and hybrid stacks.
+
+Pins the tentpole end state — greedy engine output token-identical to the
+dense per-token ``decode()`` oracle for one config per layer-kind family —
+plus the hygiene and policy invariants around it: slot reuse re-initializes
+recurrent state (and ``check_invariants`` catches a leak), SSD/RG-LRU slot
+states stay fp32 through the live engine under the default bf16 serving
+policy, unsupported layer kinds and speculative windows on recurrent
+stacks fail with actionable errors, the serving_bench arch rows are
+schema-pinned without running the bench, and the per-layer-kind
+state-bytes gauge lands in the Prometheus snapshot.
+"""
+import functools
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import mpx, serve
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+pytestmark = pytest.mark.serve
+
+# one config per layer-kind family the state pool serves: dense attention,
+# mamba2-130m-shaped pure SSD, pure RG-LRU, recurrentgemma-shaped hybrid
+CFGS = {
+    "attn": ModelConfig(
+        name="state-attn", family="dense",
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=128, pattern=("attn",), mlp="swiglu",
+        tie_embeddings=True, remat="none"),
+    "ssm": ModelConfig(
+        name="state-ssm", family="ssm",
+        n_layers=3, d_model=48, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=128, pattern=("ssd",), mlp="none",
+        norm="rmsnorm", ssm_state=16, ssm_headdim=24, ssm_expand=2,
+        ssm_chunk=8, conv_width=4, rope_theta=0.0, tie_embeddings=True,
+        remat="none"),
+    "rglru": ModelConfig(
+        name="state-rglru", family="hybrid",
+        n_layers=3, d_model=48, n_heads=0, n_kv_heads=0,
+        d_ff=96, vocab_size=128, pattern=("rglru",), mlp="geglu",
+        norm="rmsnorm", d_rnn=48, conv_width=4, rope_theta=0.0,
+        tie_embeddings=True, remat="none"),
+    "hybrid": ModelConfig(
+        name="state-hybrid", family="hybrid",
+        n_layers=5, d_model=48, n_heads=4, n_kv_heads=1, head_dim=12,
+        d_ff=96, vocab_size=128,
+        pattern=("rglru", "rglru", "local_attn"), window=8,
+        mlp="geglu", norm="rmsnorm", d_rnn=48, conv_width=4,
+        rope_theta=10000.0, tie_embeddings=True, emb_scale=True,
+        remat="none"),
+}
+
+PROMPT_LENS = (3, 11, 6, 9)
+
+
+@functools.lru_cache(maxsize=None)
+def _params(fam):
+    return mpx.cast_to_bfloat16(T.init_params(jax.random.key(7), CFGS[fam]))
+
+
+def _prompts(fam, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, CFGS[fam].vocab_size, k).tolist()
+            for k in PROMPT_LENS[:n]]
+
+
+def _oracle(cfg, params, prompts, max_new, max_seq):
+    """Greedy per-token dense decode: prefill token-by-token through
+    ``T.decode`` (batch 1), then generate with fp32 argmax — the serving
+    token-identity reference for every architecture family."""
+    step = jax.jit(lambda p, c, t, pos: T.decode(p, cfg, c, t, pos))
+    outs = []
+    for prompt in prompts:
+        cache = T.init_cache(cfg, 1, max_seq, jnp.bfloat16)
+        logits = None
+        for i, tok in enumerate(prompt):
+            logits, cache = step(params, cache,
+                                 jnp.asarray([[tok]], jnp.int32),
+                                 jnp.int32(i))
+        out = []
+        for pos in range(len(prompt), len(prompt) + max_new):
+            tok = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+            out.append(tok)
+            logits, cache = step(params, cache,
+                                 jnp.asarray([[tok]], jnp.int32),
+                                 jnp.int32(pos))
+        outs.append(out)
+    return outs
+
+
+# --------------------------------------------------------------------------
+# tentpole: token identity vs the dense decode() oracle, per family
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam", list(CFGS))
+def test_engine_token_identical_to_decode_oracle(fam):
+    """Ragged mixed workload (2 slots, 4 requests, chunked prefill +
+    continuous batching) drains the exact greedy tokens the per-token
+    dense oracle produces — for every layer-kind family."""
+    cfg, params = CFGS[fam], _params(fam)
+    prompts = _prompts(fam)
+    max_new, max_seq = 6, 32
+    want = _oracle(cfg, params, prompts, max_new, max_seq)
+
+    eng = serve.ServeEngine(cfg, params, n_slots=2, max_seq=max_seq,
+                            page_size=16, chunk_size=8)
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    got = [r.tokens for r in eng.drain()]
+    assert got == want
+    eng.cache.check_invariants()
+    if fam in ("ssm", "rglru"):
+        # page-free stack: recurrent state is O(1) per slot, no KV pools
+        assert eng.cache.num_pages == 0
+        assert eng.cache.used_pages == 0
+
+
+# --------------------------------------------------------------------------
+# satellite: slot-reuse hygiene
+# --------------------------------------------------------------------------
+
+def test_slot_reuse_resets_recurrent_state():
+    """Retire + re-admit into the same slot must zero the slot's recurrent
+    state rows (and only that slot's); check_invariants catches the leak
+    when a reset is skipped."""
+    cfg = CFGS["ssm"]
+    pool = serve.PagedStatePool(cfg, n_slots=2, max_seq=32, page_size=16)
+    assert pool.num_pages == 0
+    # poison every state leaf, as if both slots had been decoding
+    pool.pages = jax.tree.map(jnp.ones_like, pool.pages)
+    assert pool.admit(0, 8)
+    for name in ("ssm", "conv_x", "conv_B", "conv_C"):
+        leaf = np.asarray(pool.pages["scan"]["b0"][name])
+        assert (leaf[:, 0] == 0).all(), f"{name}: slot 0 not reset"
+        assert (leaf[:, 1] == 1).all(), f"{name}: slot 1 clobbered"
+    pool.check_invariants()
+    pool.retire(0)
+    assert pool._dirty[0]           # retired state is stale until reset
+    assert pool.admit(0, 8)         # re-admission resets again
+    assert not pool._dirty[0]
+    pool.check_invariants()
+    # an admit that skipped the reset must be caught, not decoded from
+    pool._dirty[0] = True
+    with pytest.raises(RuntimeError, match="stale recurrent state"):
+        pool.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# satellite: precision pin — recurrent slot state is fp32 in the live pool
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam", ["ssm", "rglru", "hybrid"])
+def test_recurrent_state_stays_fp32_through_engine(fam):
+    """Under the default bf16 serving policy, the live pool's SSD state
+    accumulators ('ssm') and RG-LRU hidden states ('h') are fp32 before
+    AND after a full drain — the MPX fragile-spot policy holds end to end
+    through the engine, not just in the spec."""
+    cfg, params = CFGS[fam], _params(fam)
+    eng = serve.ServeEngine(cfg, params, n_slots=2, max_seq=32,
+                            page_size=16, chunk_size=8)
+
+    def fp32_state_leaves():
+        found = 0
+        leaves, _ = jax.tree_util.tree_flatten_with_path(eng.cache.pages)
+        for path, leaf in leaves:
+            keys = [getattr(k, "key", "") for k in path]
+            if any(k in ("ssm", "h") for k in keys):
+                assert leaf.dtype == jnp.float32, (keys, leaf.dtype)
+                found += 1
+        return found
+
+    assert fp32_state_leaves() > 0
+    for p in _prompts(fam, n=3):
+        eng.submit(p, max_new=4)
+    eng.drain()
+    assert fp32_state_leaves() > 0
+
+
+# --------------------------------------------------------------------------
+# satellite: actionable errors name the kind and the supported families
+# --------------------------------------------------------------------------
+
+def test_unsupported_kind_names_kind_and_families():
+    cfg = ModelConfig(
+        name="state-weird", family="dense",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, pattern=("conv",), mlp="swiglu",
+        tie_embeddings=True, remat="none")
+    with pytest.raises(ValueError) as ei:
+        T._require_paged_support(cfg)
+    msg = str(ei.value)
+    assert "'conv'" in msg                      # the offending kind, named
+    assert "attn" in msg and "rglru" in msg     # the supported families
+    # the engine fails the same way, before any state is allocated
+    with pytest.raises(ValueError, match="conv"):
+        serve.ServeEngine(cfg, {}, n_slots=1, max_seq=32, page_size=16)
+
+
+def test_spec_tokens_on_recurrent_names_kind_and_fix():
+    """Speculative windows need paged rollback; recurrent state only moves
+    forward.  The v1 cap is an engine-construction error naming the layer
+    kind and the fix (spec_tokens=0)."""
+    with pytest.raises(ValueError, match="rglru"):
+        serve.ServeEngine(CFGS["hybrid"], _params("hybrid"), n_slots=2,
+                          max_seq=32, page_size=16, spec_tokens=2)
+    with pytest.raises(ValueError, match="spec_tokens=0"):
+        serve.ServeEngine(CFGS["ssm"], _params("ssm"), n_slots=2,
+                          max_seq=32, page_size=16, spec_tokens=1)
+    # spec_tokens=0 (the named fix) constructs fine
+    eng = serve.ServeEngine(CFGS["ssm"], _params("ssm"), n_slots=2,
+                            max_seq=32, page_size=16, spec_tokens=0)
+    assert eng.spec_tokens == 0
+
+
+# --------------------------------------------------------------------------
+# satellite: serving_bench arch rows, schema-pinned without running it
+# --------------------------------------------------------------------------
+
+def _load_serving_bench():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    import importlib
+    return importlib.import_module("benchmarks.serving_bench")
+
+
+def test_serving_bench_arch_rows_schema_pinned():
+    sb = _load_serving_bench()
+    names = sb.expected_row_names()
+    for fam in ("attn", "ssm", "rglru", "hybrid"):
+        assert f"serving_tok_arch_{fam}" in names
+    rows = [(n, 1.0, "") for n in names]
+    sb.check_rows(rows)                         # full set passes
+    with pytest.raises(RuntimeError, match="drifted"):
+        sb.check_rows([r for r in rows if r[0] != "serving_tok_arch_ssm"])
+
+
+# --------------------------------------------------------------------------
+# satellite: per-layer-kind state-bytes gauge in the Prometheus snapshot
+# --------------------------------------------------------------------------
+
+def test_state_bytes_gauge_per_layer_kind():
+    """The engine registry reports where decode memory lives: KV pages
+    for attention layers vs O(1) recurrent state for rglru layers, one
+    labeled gauge series per kind."""
+    eng = serve.ServeEngine(CFGS["hybrid"], _params("hybrid"), n_slots=2,
+                            max_seq=32, page_size=16)
+    snap = eng.metrics_snapshot()
+    rec = snap['serve_state_bytes{kind="rglru"}']
+    kv = snap['serve_state_bytes{kind="local_attn"}']
+    assert rec > 0 and kv > 0
+    assert 'serve_state_bytes{kind="rglru"}' in eng.prometheus()
+    # pure-recurrent engines report only recurrent kinds (no pages exist)
+    eng2 = serve.ServeEngine(CFGS["ssm"], _params("ssm"), n_slots=2,
+                             max_seq=32, page_size=16)
+    snap2 = eng2.metrics_snapshot()
+    assert snap2['serve_state_bytes{kind="ssd"}'] > 0
+    assert not any("attn" in k for k in snap2 if "serve_state_bytes" in k)
