@@ -55,6 +55,17 @@ per-slot recurrent state, zero pages) and the recurrentgemma-shaped
 hybrid (both at once) with identical scheduling — so the trajectory
 shows serving throughput per architecture, not just for transformers.
 
+The resilience rows price the failure paths:
+``serving_preempt_recompute_overhead_pct`` runs the identical greedy
+workload on an ample vs a deliberately too-small page pool (preemption +
+recompute-prefill, token-identical output) and reports the extra engine
+steps as a percentage — 0 when preemption never fires; and
+``serving_resilience_statuses`` drives one scripted chaos schedule
+(NaN-poisoned logits, a clock-jump deadline expiry, a cancellation) and
+reports the count of distinct terminal statuses with the per-status
+tally in the derived column.  ``--fault-trace`` exports the chaos
+drive's Chrome trace for CI to archive beside the JSON rows.
+
 Row names are pinned by :func:`expected_row_names` — ``run()`` refuses
 to return a row set that drifted from it, and the fast schema test in
 ``tests/test_quant.py`` pins the trajectory-critical names, so a rename
@@ -115,6 +126,8 @@ def expected_row_names() -> list:
               "serving_spec_accept_rate", "serving_spec_tokens_per_step"]
     names += ["serving_obs_overhead_pct"]
     names += [f"serving_tok_arch_{label}" for label, _ in _arch_cell_cfgs()]
+    names += ["serving_preempt_recompute_overhead_pct",
+              "serving_resilience_statuses"]
     return names
 
 
@@ -231,7 +244,8 @@ def _drive(engine, prompts, max_new):
     return engine.stats.summary()
 
 
-def run(trace_path=None, metrics_path=None) -> list[tuple[str, float, str]]:
+def run(trace_path=None, metrics_path=None,
+        fault_trace_path=None) -> list[tuple[str, float, str]]:
     import jax
     import jax.numpy as jnp
 
@@ -391,6 +405,69 @@ def run(trace_path=None, metrics_path=None) -> list[tuple[str, float, str]]:
             f"serving_tok_arch_{label}", 1e6 / max(s["tok_per_s"], 1e-9),
             f"tok_s={s['tok_per_s']:.0f} kinds={kinds} "
             f"pages={engine.cache.num_pages}"))
+
+    # -- resilience: preemption/recompute overhead --------------------------
+    # identical greedy workload on an ample pool vs a pool deliberately
+    # too small for both slots (3 pages, 2 pages per request): the second
+    # request can only admit by evicting the first, which then recomputes.
+    # Greedy output is token-identical between the runs (pinned by
+    # tests/test_serve_faults.py), so the pct is the pure step cost of the
+    # recompute prefills — and exactly 0 when preemption never fires.
+    pre_prompts = [rng.integers(1, cfg.vocab_size, 8).tolist()
+                   for _ in range(4)]
+    pre = {}
+    for label, pool_kw in (("ample", {}), ("constrained", {"num_pages": 3})):
+        engine = serve.ServeEngine(cfg, params, n_slots=2, max_seq=64,
+                                   page_size=8, chunk_size=16, **pool_kw)
+        pre[label] = _drive(engine, pre_prompts, 8)
+        pre[label]["preemptions"] = engine.metrics_snapshot().get(
+            "serve_preemptions_total", 0)
+    overhead_pct = (100.0
+                    * (pre["constrained"]["steps"] - pre["ample"]["steps"])
+                    / max(pre["ample"]["steps"], 1))
+    rows.append((
+        "serving_preempt_recompute_overhead_pct", overhead_pct,
+        f"steps ample={int(pre['ample']['steps'])} "
+        f"constrained={int(pre['constrained']['steps'])} "
+        f"preemptions={int(pre['constrained']['preemptions'])} "
+        f"(ample run: {int(pre['ample']['preemptions'])})"))
+
+    # -- resilience: one scripted chaos drive -------------------------------
+    # four requests, four fates: one poisoned to NaN logits mid-decode,
+    # one whose deadline a scripted clock jump expires, one cancelled
+    # while waiting, one untouched — the value is the count of distinct
+    # terminal statuses (4 = every failure path exercised); the derived
+    # column carries the per-status tally.  With --fault-trace the drive
+    # runs under a tracer and exports the Chrome trace (preempt / timeout
+    # / cancelled / nonfinite instants on the per-slot timelines) for CI
+    # to archive beside the JSON rows.
+    clock = serve.FakeClock()
+    faults = (serve.FaultInjector(clock=clock)
+              .poison_logits(1, tick=2)
+              .advance_clock(3, 10.0))
+    ftracer = Tracer(process_name="repro.serve.chaos")
+    engine = serve.ServeEngine(cfg, params, n_slots=2, max_seq=64,
+                               page_size=16, chunk_size=16,
+                               faults=faults, tracer=ftracer)
+    rid_ok = engine.submit(pre_prompts[0], max_new=8)
+    engine.submit(pre_prompts[1], max_new=8, request_id=1)  # poisoned
+    rid_dl = engine.submit(pre_prompts[2], max_new=8, deadline_ms=500)
+    rid_cx = engine.submit(pre_prompts[3], max_new=8)
+    engine.step()
+    engine.step()
+    engine.cancel(rid_cx)
+    status_of = {r.request_id: r.status for r in engine.drain()}
+    counts = {}
+    for st in status_of.values():
+        counts[st] = counts.get(st, 0) + 1
+    engine.cache.check_invariants()      # chaos must not leak the pool
+    assert status_of[rid_ok] == "ok" and status_of[1] == "failed"
+    assert status_of[rid_dl] == "timeout" and status_of[rid_cx] == "cancelled"
+    rows.append((
+        "serving_resilience_statuses", float(len(counts)),
+        " ".join(f"{k}={v}" for k, v in sorted(counts.items()))))
+    if fault_trace_path:
+        ftracer.export(fault_trace_path)
     check_rows(rows)     # the CI artifact schema is pinned — fail loudly
 
     if trace_path or metrics_path:
@@ -423,8 +500,12 @@ def main() -> None:
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the engine's Prometheus text snapshot "
                          "to this path")
+    ap.add_argument("--fault-trace", type=str, default=None,
+                    help="export a Chrome trace of the scripted chaos "
+                         "drive (poison/deadline/cancel) to this path")
     args = ap.parse_args()
-    rows = run(trace_path=args.trace, metrics_path=args.metrics_out)
+    rows = run(trace_path=args.trace, metrics_path=args.metrics_out,
+               fault_trace_path=args.fault_trace)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

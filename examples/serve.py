@@ -101,9 +101,30 @@ retire — as a per-slot timeline.  The instrumentation reads host state
 only; tracing adds zero device syncs and <3% tok/s (the bench's
 ``serving_obs_overhead_pct`` row prices it).
 
+**Failure semantics** (the resilience layer): every request ends with
+exactly one result whose ``status`` is ``ok`` / ``cancelled`` /
+``timeout`` / ``failed`` — partial output is always delivered, never
+dropped.  ``--max-queue N`` bounds the waiting queue: a full queue makes
+``submit()`` raise :class:`serve.EngineOverloaded` (typed backpressure
+carrying queue depth and an admission-time estimate) — this script
+handles it the way a real client should, by stepping the engine and
+resubmitting.  ``--deadline-ms`` attaches an end-to-end deadline to
+every request; expiry retires it as ``timeout`` at the next tick
+boundary with whatever tokens it has.  Under page-pool pressure the
+scheduler preempts the youngest decoding slot and requeues it as a
+recompute prefill — preempted requests still finish ``ok``,
+token-identical under greedy sampling.  ``--chaos`` arms the
+:mod:`repro.serve.faults` injector with a small scripted schedule
+(NaN-poison one request's logits mid-decode, hold the page pool for a
+few ticks) to show the failure paths live: the poisoned request ends
+``failed`` with an explanatory ``metrics.error``, its batch neighbors'
+output is untouched, and the drive's summary counts every status.
+
 Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4 \
          --spec-tokens 3 --kv-dtype i8 \
          --trace serve_trace.json --metrics-out metrics.prom
+     PYTHONPATH=src python examples/serve.py --chaos --max-queue 8 \
+         --deadline-ms 60000
 """
 import argparse
 
@@ -161,6 +182,21 @@ def main():
                     help="KV-cache page storage format: bf16 passthrough "
                          "or quantized with per-page amax scales "
                          "(repro.quant; dequantized inside the kernel)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the waiting queue: a full queue makes "
+                         "submit() raise EngineOverloaded (typed "
+                         "backpressure; this script then steps the "
+                         "engine and resubmits)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline; expiry "
+                         "retires the request as status=timeout with "
+                         "its partial output")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the fault injector: NaN-poison request "
+                         "1's logits at tick 3 and hold the page pool "
+                         "over ticks 2-5 — demonstrates the nonfinite "
+                         "guard, pool-pressure handling and per-request "
+                         "failure isolation")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -183,6 +219,11 @@ def main():
                      f"no decode path to serve")
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
     tracer = Tracer(process_name="repro.serve") if args.trace else None
+    faults = None
+    if args.chaos:
+        faults = (serve.FaultInjector()
+                  .poison_logits(1, tick=3)
+                  .exhaust_pool(2, until_tick=6))
     engine = serve.ServeEngine(
         cfg, params, n_slots=args.slots, max_seq=args.max_seq,
         page_size=args.page_size, chunk_size=args.chunk,
@@ -190,23 +231,44 @@ def main():
         spec_tokens=args.spec_tokens,
         use_kernel=args.use_kernel, pages_per_block=args.pages_per_block,
         kv_dtype=args.kv_dtype,
+        max_queue=args.max_queue,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p),
-        tracer=tracer)
+        tracer=tracer, faults=faults)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size,
                               rng.integers(4, 12)).tolist()
-        engine.submit(prompt, max_new=args.max_new)
+        while True:
+            try:
+                engine.submit(prompt, max_new=args.max_new,
+                              deadline_ms=args.deadline_ms)
+                break
+            except serve.EngineOverloaded as e:
+                # the backpressure contract: back off (here: run a tick
+                # to drain the queue) and resubmit
+                eta = (f"~{e.est_wait_s:.1f}s" if e.est_wait_s is not None
+                       else "unknown")
+                print(f"overloaded (queue {e.queue_depth}/{e.max_queue}, "
+                      f"eta {eta}) — stepping engine and retrying")
+                engine.step()
 
+    statuses = {}
     for res in engine.drain():
+        statuses[res.status] = statuses.get(res.status, 0) + 1
         ttft = res.metrics.ttft
         rate = res.metrics.acceptance_rate
         spec = f" accept {rate:.0%}" if rate is not None else ""
+        tail = "" if res.status == "ok" else f" [{res.status}]"
+        if res.metrics.error:
+            tail += f" ({res.metrics.error})"
+        ttft_s = f"ttft {ttft * 1e3:.0f}ms" if ttft is not None else "no ttft"
         print(f"req {res.request_id:2d}: prompt[{len(res.prompt)}] -> "
               f"{len(res.tokens)} tokens: {res.tokens[:8]}... "
-              f"(ttft {ttft * 1e3:.0f}ms{spec})")
+              f"({ttft_s}{spec}){tail}")
+    print("statuses: "
+          + " ".join(f"{k}={v}" for k, v in sorted(statuses.items())))
 
     s = engine.stats.summary()
     print(f"\n{int(s['requests'])} requests, {int(s['new_tokens'])} tokens "

@@ -98,6 +98,44 @@ With temperature 0 the accept rule is argmax equality, so the greedy
 speculative engine is token-identical to the non-speculative engine —
 speculation changes step count, never output.
 
+**Failure semantics** — the resilience layer assumes an adversarial
+world (overload, stragglers, poisoned numerics) and turns every
+degradation into a typed, counted, partial-output-preserving outcome:
+
+- Every request ends with exactly one :class:`RequestResult` whose
+  ``status`` is ``"ok"``, ``"cancelled"``, ``"timeout"``, or
+  ``"failed"`` — partial output is always delivered on ``tokens``,
+  never dropped, and ``metrics.error`` explains a failure.
+- **Backpressure**: ``ServeEngine(max_queue=N)`` bounds the waiting
+  queue; a full queue makes ``submit()`` raise :class:`EngineOverloaded`
+  (carrying ``queue_depth`` and an ``est_wait_s`` admission estimate)
+  instead of growing host memory without bound.
+- **Deadlines / cancellation**: ``submit(deadline_ms=...)`` and
+  ``engine.cancel(rid)`` retire a queued or in-flight request at the
+  next tick boundary (statuses ``"timeout"`` / ``"cancelled"``), freeing
+  its slot and pages for the same tick's admissions.
+- **Preemption & recompute**: when the page pool can't cover the head
+  request but a slot is free, the scheduler evicts the *youngest
+  decoding* slot — pages freed, recurrent-state claim dropped — and
+  requeues it with its committed tokens as a recompute prefill through
+  the ordinary chunked-prefill path.  A preempted request still ends
+  ``"ok"`` with greedy output token-identical to the unpreempted run;
+  the cost is re-prefilling prompt + output once per eviction
+  (``metrics.preemptions``, ``serve_preemptions_total``, and the
+  bench's ``serving_preempt_recompute_overhead_pct`` row price it).
+- **Nonfinite guard**: each step's (B, W, V) window logits are checked
+  for NaN/Inf inside the jitted step; the verdict rides the two (B,)
+  arrays already transferred (zero added syncs), and only the poisoned
+  request dies (status ``"failed"``, slot retired, pool reclaimed) —
+  its batch neighbors' output is untouched.  A mid-tick exception gets
+  the same discipline: the plan's requests fail with partial output,
+  their slots retire, and ``check_invariants()`` still passes.
+- **Chaos harness**: :mod:`repro.serve.faults` scripts NaN poison, pool
+  exhaustion, Nth-step failure and clock jumps at the engine's seams
+  (:class:`FaultInjector`, :class:`FakeClock`, :class:`InjectedFault`);
+  tests/test_serve_faults.py drives it to prove ``drain()`` terminates
+  with correct statuses under every schedule.
+
 Quickstart::
 
     from repro import mpx, serve
@@ -115,12 +153,14 @@ Quickstart::
     print(engine.stats.summary())   # incl. spec_accept_rate, tokens_per_step
 """
 from repro.serve.cache import PagedKVCache, PagedStatePool
-from repro.serve.engine import RequestResult, ServeEngine
+from repro.serve.engine import EngineOverloaded, RequestResult, ServeEngine
+from repro.serve.faults import FakeClock, FaultInjector, InjectedFault
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.propose import DraftModelProposer, NGramProposer, Proposer
-from repro.serve.sampling import (SamplingParams, make_sampler,
-                                  make_verifier, probs_from_logits,
-                                  rejection_sample, sample_logits)
+from repro.serve.sampling import (SamplingParams, guard_nonfinite,
+                                  make_sampler, make_verifier,
+                                  probs_from_logits, rejection_sample,
+                                  sample_logits)
 from repro.serve.scheduler import Request, Scheduler, StepOutcome, StepPlan
 
 # the legacy monolithic-slab serving step, generalized to take
@@ -130,7 +170,11 @@ from repro.train.steps import make_serve_step
 
 __all__ = [
     "DraftModelProposer",
+    "EngineOverloaded",
     "EngineStats",
+    "FakeClock",
+    "FaultInjector",
+    "InjectedFault",
     "NGramProposer",
     "PagedKVCache",
     "PagedStatePool",
@@ -143,6 +187,7 @@ __all__ = [
     "ServeEngine",
     "StepOutcome",
     "StepPlan",
+    "guard_nonfinite",
     "make_sampler",
     "make_serve_step",
     "make_verifier",

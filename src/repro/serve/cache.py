@@ -159,6 +159,11 @@ class PagedKVCache:
 
             self._reset_slot_state = jax.jit(raw_reset, donate_argnums=(0,))
         self._free: List[int] = list(range(self.num_pages))
+        # fault-injection hold (see hold_pages): pages taken out of the
+        # free list without an owner.  A third, first-class page state —
+        # check_invariants accounts for it, so a scripted exhaustion
+        # window can't masquerade as a leak.
+        self._held: List[int] = []
         self._tables = np.full((n_slots, self.max_pages_per_slot),
                                self.sentinel, np.int32)
         self._owned: List[List[int]] = [[] for _ in range(n_slots)]
@@ -282,6 +287,36 @@ class PagedKVCache:
         self._table_device = None
         self._update_pool_gauges()
 
+    def slot_pages(self, slot: int) -> int:
+        """Pages currently owned by ``slot`` (0 when idle or page-free)."""
+        return len(self._owned[slot])
+
+    # -- fault injection (repro.serve.faults) --------------------------------
+
+    def hold_pages(self, n: Optional[int] = None) -> int:
+        """Take up to ``n`` pages (all free pages when None) out of the
+        free list with no owner — the fault-injection seam that simulates
+        pool exhaustion.  Held pages stay fully accounted
+        (``check_invariants`` treats held as a third page state beside
+        owned and free); :meth:`release_held` returns them.  Returns the
+        number of pages actually taken."""
+        if not self.has_paged:
+            return 0
+        take = len(self._free) if n is None else min(int(n),
+                                                     len(self._free))
+        for _ in range(take):
+            self._held.append(self._free.pop())
+        self._update_pool_gauges()
+        return take
+
+    def release_held(self) -> int:
+        """Return every held page to the free list; returns the count."""
+        n = len(self._held)
+        self._free.extend(self._held)
+        self._held = []
+        self._update_pool_gauges()
+        return n
+
     # -- length bookkeeping (speculative windows) ---------------------------
 
     def capacity(self, slot: int) -> int:
@@ -350,9 +385,16 @@ class PagedKVCache:
     def used_pages(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def held_pages(self) -> int:
+        """Pages held out of the pool by fault injection (see
+        :meth:`hold_pages`)."""
+        return len(self._held)
+
     def check_invariants(self) -> None:
-        """No page is double-owned, free + owned covers the pool exactly,
-        and per-slot lengths respect committed <= written <= capacity.
+        """No page is double-owned, owned + free + held covers the pool
+        exactly, and per-slot lengths respect committed <= written <=
+        capacity.
 
         Raises ``RuntimeError`` (not ``assert`` — these must survive
         ``python -O``) on the first violated invariant.
@@ -362,7 +404,9 @@ class PagedKVCache:
             raise RuntimeError("double-allocated page")
         if set(owned) & set(self._free):
             raise RuntimeError("page both owned and free")
-        if len(owned) + len(self._free) != self.num_pages:
+        if set(self._held) & (set(owned) | set(self._free)):
+            raise RuntimeError("held page also owned or free")
+        if len(owned) + len(self._free) + len(self._held) != self.num_pages:
             raise RuntimeError("leaked page")
         for slot, row in enumerate(self._owned):
             mapped = [p for p in self._tables[slot] if p != self.sentinel]

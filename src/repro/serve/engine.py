@@ -66,12 +66,31 @@ host state and the two ``(B,)`` arrays the step already transfers
 (``accept`` / ``token``): tracing adds **zero device syncs** to
 ``step()`` (pinned by tests/test_obs.py) and <3% tok/s on the bench
 workload (``serving_obs_overhead_pct``).
+
+Resilience: the engine assumes an adversarial world, not a cooperative
+one.  Admission is bounded (``max_queue`` -> :class:`EngineOverloaded`
+backpressure), pool pressure is survived by preempting the youngest
+decoding slot and recomputing it through the chunked-prefill path
+(greedy output token-identical, ``serve_preemptions_total`` counts the
+cost), requests carry deadlines (``submit(deadline_ms=...)``) and can be
+cancelled (:meth:`ServeEngine.cancel`) — both enforced at tick
+boundaries with partial output delivered — and every step's window
+logits pass a nonfinite guard whose verdict rides the two arrays already
+transferred (a poisoned request dies with status ``"failed"``; its
+batch neighbors don't notice).  A mid-tick exception fails exactly the
+plan's requests and retires their slots, so pages cannot leak and the
+engine keeps serving.  All of it is scriptable for chaos testing via
+:mod:`repro.serve.faults` and counted/traced via ``repro.obs``
+(``serve_preemptions_total`` / ``serve_timeouts_total`` /
+``serve_cancelled_total`` / ``serve_nonfinite_total`` /
+``serve_failed_total``; ``preempt`` / ``timeout`` / ``cancelled`` /
+``nonfinite`` / ``failed`` tracer instants).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,9 +102,11 @@ from repro.models import transformer as tfm
 from repro.obs.registry import Registry, merged_prometheus, merged_snapshot
 from repro.obs.trace import Tracer
 from repro.serve.cache import PagedKVCache
+from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.metrics import EngineStats, RequestMetrics
 from repro.serve.propose import NGramProposer, Proposer
-from repro.serve.sampling import SamplingParams, make_verifier
+from repro.serve.sampling import (SamplingParams, guard_nonfinite,
+                                  make_verifier)
 from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
 
 PyTree = Any
@@ -98,13 +119,50 @@ def _slot_tid(slot_id: int) -> int:
     return 1 + slot_id
 
 
+class EngineOverloaded(RuntimeError):
+    """Typed backpressure from ``submit()`` when the bounded queue is
+    full (``ServeEngine(max_queue=...)``).
+
+    Carries ``queue_depth`` (requests waiting), ``max_queue``, and
+    ``est_wait_s`` — a rough admission estimate (pending token work /
+    observed throughput; None before any throughput history) — so a
+    client can back off intelligently instead of retrying hot.
+    """
+
+    def __init__(self, queue_depth: int, max_queue: int,
+                 est_wait_s: Optional[float] = None):
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        self.est_wait_s = est_wait_s
+        eta = ("no throughput history yet" if est_wait_s is None
+               else f"~{est_wait_s:.2f}s of queued work ahead")
+        super().__init__(
+            f"engine overloaded: {queue_depth} requests waiting "
+            f"(max_queue={max_queue}), {eta} — back off and resubmit")
+
+
 @dataclasses.dataclass
 class RequestResult:
-    """A finished request: generated tokens + lifecycle metrics."""
+    """A finished request: generated tokens + lifecycle metrics.
+
+    ``status`` is the request's terminal disposition — partial output is
+    always delivered alongside it, never dropped:
+
+    - ``"ok"`` — ran to completion (``max_new`` tokens).  This includes
+      requests that were preempted and recomputed along the way
+      (``metrics.preemptions`` counts the evictions; greedy output is
+      token-identical to an unpreempted run).
+    - ``"cancelled"`` — retired by :meth:`ServeEngine.cancel` at a tick
+      boundary; ``tokens`` holds whatever had been generated.
+    - ``"timeout"`` — its ``deadline_ms`` passed; partial tokens.
+    - ``"failed"`` — killed by the nonfinite-logit guard or a device-step
+      / commit error; ``metrics.error`` says why.
+    """
     request_id: int
     prompt: List[int]
     tokens: List[int]
     metrics: RequestMetrics
+    status: str = "ok"
 
 
 class ServeEngine:
@@ -118,6 +176,19 @@ class ServeEngine:
     draft windows and prefill chunks fill the remainder).
     ``spec_tokens`` sets the speculative window (0 disables);
     ``proposer`` overrides the default n-gram prompt-lookup drafter.
+
+    Resilience knobs: ``max_queue`` bounds admission (``submit()`` raises
+    :class:`EngineOverloaded` instead of queueing unboundedly);
+    ``preempt`` enables eviction-and-recompute of the youngest decoding
+    slot under pool pressure (on by default — with a default-sized pool
+    it can never fire); ``submit(deadline_ms=...)`` and ``cancel(rid)``
+    retire requests at tick boundaries with partial output (statuses on
+    :class:`RequestResult`); every step's window logits pass a
+    nonfinite guard that fails only the poisoned request.  ``faults``
+    accepts a :class:`~repro.serve.faults.FaultInjector` (chaos
+    testing); ``clock`` an alternative ``time.perf_counter`` (deadline
+    tests use :class:`~repro.serve.faults.FakeClock` — defaults to the
+    injector's clock when it has one).
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -130,6 +201,10 @@ class ServeEngine:
                  proposer: Optional[Proposer] = None,
                  use_kernel: bool = False, pages_per_block: int = 1,
                  kv_dtype="bf16", seed: int = 0,
+                 max_queue: Optional[int] = None,
+                 preempt: bool = True,
+                 faults: Optional[FaultInjector] = None,
+                 clock: Optional[Callable[[], float]] = None,
                  registry: Optional[Registry] = None,
                  tracer: Optional[Tracer] = None):
         if not cfg.supports_decode():
@@ -182,6 +257,7 @@ class ServeEngine:
                                    max_batched_tokens=max_batched_tokens,
                                    spec_tokens=self.spec_tokens,
                                    proposer=self.proposer,
+                                   preempt=preempt,
                                    registry=self.registry)
         self.sampling = sampling
         self.stats = EngineStats(n_slots)
@@ -193,11 +269,39 @@ class ServeEngine:
         # drain()'s no-progress guard reads these per-tick flags
         self._last_tick_admitted = False
         self._last_tick_stepped = False
+        # resilience state: bounded admission, deadlines/cancellation at
+        # tick boundaries, fault injection, injectable clock
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1: {max_queue}")
+        self.max_queue = max_queue
+        self.faults = faults
+        if clock is None and faults is not None and faults.clock is not None:
+            clock = faults.clock
+        self._clock: Callable[[], float] = (clock if clock is not None
+                                            else time.perf_counter)
+        self._deadlines: dict[int, float] = {}   # rid -> absolute expiry
+        self._cancelled: set[int] = set()        # applied at tick start
+        # the always-present poison operand for the jitted step (host
+        # numpy, built once — jnp.asarray per step is a host->device
+        # transfer, not a sync; the test_obs transfer pin counts only
+        # device->host np.asarray calls)
+        self._zero_poison = np.zeros(n_slots, np.bool_)
+        self._timeouts = self.registry.counter(
+            "serve_timeouts_total", "requests retired at their deadline")
+        self._cancels = self.registry.counter(
+            "serve_cancelled_total", "requests cancelled by the client")
+        self._nonfinite = self.registry.counter(
+            "serve_nonfinite_total",
+            "requests failed by the nonfinite-logit guard")
+        self._failures = self.registry.counter(
+            "serve_failed_total",
+            "requests failed by a device-step or commit error "
+            "(includes nonfinite-guard kills)")
 
         verifier = make_verifier(sampling)
 
         def raw_step(params, pages, table, tokens, start, valid,
-                     logit_idx, draft, draft_len, key):
+                     logit_idx, draft, draft_len, poison, key):
             # serve_forward returns the (B, W, V) window logits named by
             # logit_idx — the unembed runs once per window position, not
             # per chunk position; verification/sampling runs in fp32
@@ -206,7 +310,15 @@ class ServeEngine:
                 logit_idx=logit_idx, page_size=page_size,
                 use_kernel=use_kernel, pages_per_block=pages_per_block,
                 kv_format=self.kv_format.name)
+            # fault seam: NaN-poison the masked slots' windows *before*
+            # verification, so injected poison exercises the exact guard
+            # path a real quantized-overflow NaN would take
+            logits = jnp.where(poison[:, None, None], jnp.nan, logits)
             accept, token = verifier(logits, draft, draft_len, key)
+            # nonfinite-logit guard: verdict rides the two (B,) arrays
+            # already transferred (token -1 = failure sentinel) — zero
+            # added syncs
+            accept, token = guard_nonfinite(logits, accept, token)
             return accept, token, new_pages
 
         # one compiled step shape AND program: (B, chunk_size) for
@@ -218,13 +330,21 @@ class ServeEngine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int = 32,
-               request_id: Optional[int] = None) -> int:
+               request_id: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> int:
         """Enqueue a request; returns its id.
 
         An explicit ``request_id`` colliding with a queued, in-flight, or
         already-finished request is rejected — a duplicate would corrupt
         that request's metrics entry and collide in ``drain()``'s
         id-sorted results (results accumulate for the engine's lifetime).
+
+        ``deadline_ms`` caps end-to-end latency: at the first tick
+        boundary at or past the deadline the request is retired with
+        status ``"timeout"`` and whatever tokens it has.  With
+        ``max_queue`` configured, a full waiting queue raises
+        :class:`EngineOverloaded` (typed backpressure carrying queue
+        depth and an admission estimate) before any state is touched.
         """
         # fail fast on a stub proposer: plan() would otherwise raise mid-
         # step, after this request reserved pages and entered a batch —
@@ -233,6 +353,13 @@ class ServeEngine:
         unimplemented = getattr(self.proposer, "unimplemented", None)
         if unimplemented:
             raise NotImplementedError(unimplemented)
+        if (self.max_queue is not None
+                and len(self.scheduler.waiting) >= self.max_queue):
+            raise EngineOverloaded(len(self.scheduler.waiting),
+                                   self.max_queue,
+                                   self._admission_estimate())
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0: {deadline_ms}")
         rid = self._next_id if request_id is None else request_id
         if rid in self._inflight or rid in self._result_ids:
             raise ValueError(
@@ -240,16 +367,47 @@ class ServeEngine:
                 f"finished — engine request ids are single-use")
         self.scheduler.submit(Request(rid, list(prompt), max_new))
         self._next_id = max(self._next_id, rid) + 1
+        now = self._clock()
         self._inflight[rid] = RequestMetrics(
-            request_id=rid, prompt_len=len(prompt),
-            submit_time=time.perf_counter())
+            request_id=rid, prompt_len=len(prompt), submit_time=now)
+        if deadline_ms is not None:
+            self._deadlines[rid] = now + deadline_ms / 1e3
         if self.tracer is not None:
             self.tracer.instant("submit", tid=TID_ENGINE, rid=rid,
                                 prompt_len=len(prompt), max_new=max_new)
         return rid
 
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a queued or in-flight request.
+
+        Enforced at the next tick boundary: the request is retired with
+        status ``"cancelled"`` and its partial output delivered.  Returns
+        False for ids that are unknown or already finished (cancellation
+        raced completion — the existing result stands).
+        """
+        if rid not in self._inflight:
+            return False
+        self._cancelled.add(rid)
+        return True
+
+    def _admission_estimate(self) -> Optional[float]:
+        """Rough seconds of queued+running token work ahead of a new
+        request, from observed throughput (None without history)."""
+        if self.stats.elapsed <= 0 or self.stats.total_new_tokens == 0:
+            return None
+        pending = sum(s.req.max_new - len(s.out)
+                      for s in self.scheduler.slots if s is not None)
+        pending += sum(r.max_new - len(r.resume_out or [])
+                       for r in self.scheduler.waiting)
+        return pending / self.stats.throughput_tok_per_s
+
     def step(self) -> List[RequestResult]:
-        """One scheduler tick.  Returns requests that finished this step.
+        """One scheduler tick.  Returns requests that finished this step
+        — by completion or by any resilience path (cancellation, deadline
+        expiry, the nonfinite guard, a device failure: see
+        :class:`RequestResult.status`).  Cancel/deadline sweeps run at
+        the tick boundary, before admission, so an expired slot's pages
+        are reclaimed in time for this tick's admissions.
 
         ``EngineStats.elapsed`` covers the **full** tick — admission
         through commit — so host-side scheduler work is charged to the
@@ -257,19 +415,30 @@ class ServeEngine:
         excluding it (regression-tested against ``drain()`` wall time).
         """
         tr = self.tracer
-        t0 = time.perf_counter()
+        t0 = self._clock()
         tick_us = tr.now_us() if tr is not None else 0.0
-        admitted = self.scheduler.admit()
+        if self.faults is not None:
+            self.faults.begin_tick(self.cache)
+        results: List[RequestResult] = []
+        self._sweep_cancelled(results)
+        self._sweep_deadlines(results)
+        admitted, preempted = self.scheduler.admit()
         self._last_tick_admitted = bool(admitted)
+        for rid in preempted:
+            self._inflight[rid].preemptions += 1
+            if tr is not None:
+                tr.instant("preempt", tid=TID_ENGINE, rid=rid)
         if tr is not None:
             t_admit = tr.now_us()
             tr.complete("admit", tick_us, t_admit - tick_us,
-                        tid=TID_ENGINE, args={"admitted": list(admitted)})
+                        tid=TID_ENGINE,
+                        args={"admitted": list(admitted),
+                              "preempted": list(preempted)})
             for rid in admitted:
                 tr.instant("admit", tid=TID_ENGINE, rid=rid)
         if self.scheduler.busy_slots == 0:
             self._last_tick_stepped = False
-            return []
+            return results
         self._last_tick_stepped = True
         if tr is not None:
             plan_us = tr.now_us()
@@ -280,39 +449,78 @@ class ServeEngine:
             self._key, key = jax.random.split(self._key)
         slot_rids = [None if s is None else s.req.request_id
                      for s in self.scheduler.slots]
+        # pre-commit slot snapshot: if commit() raises partway, the
+        # cleanup path still knows each request's partial output
+        slot_objs = list(self.scheduler.slots)
+        poison = (self.faults.poison_mask(slot_rids)
+                  if self.faults is not None else self._zero_poison)
         if tr is not None:
             dev_us = tr.now_us()
             tr.complete("plan", plan_us, dev_us - plan_us, tid=TID_ENGINE,
                         args={"kind": plan.kind, "tokens": plan.n_tokens,
                               "drafts": plan.n_draft})
-        accept, token, self.cache.pages = self._device_step(
-            self.params, self.cache.pages, self.cache.table_device(),
-            jnp.asarray(plan.tokens), jnp.asarray(plan.start),
-            jnp.asarray(plan.valid), jnp.asarray(plan.logit_idx),
-            jnp.asarray(plan.draft), jnp.asarray(plan.draft_len), key)
-        if tr is not None:
-            sync_us = tr.now_us()
-            tr.complete("device step", dev_us, sync_us - dev_us,
-                        tid=TID_ENGINE, args={"kind": plan.kind})
-        accept = np.asarray(accept)                   # blocks on the device
-        token = np.asarray(token)
-        now = time.perf_counter()
-        if tr is not None:
-            commit_us = tr.now_us()
-            tr.complete("host sync", sync_us, commit_us - sync_us,
-                        tid=TID_ENGINE)
+        try:
+            if self.faults is not None:
+                # raised before the device call, while the donated page
+                # buffers are still intact
+                self.faults.maybe_fail_step()
+            accept, token, self.cache.pages = self._device_step(
+                self.params, self.cache.pages, self.cache.table_device(),
+                jnp.asarray(plan.tokens), jnp.asarray(plan.start),
+                jnp.asarray(plan.valid), jnp.asarray(plan.logit_idx),
+                jnp.asarray(plan.draft), jnp.asarray(plan.draft_len),
+                jnp.asarray(poison), key)
+            if tr is not None:
+                sync_us = tr.now_us()
+                tr.complete("device step", dev_us, sync_us - dev_us,
+                            tid=TID_ENGINE, args={"kind": plan.kind})
+            accept = np.asarray(accept)               # blocks on the device
+            token = np.asarray(token)
+            now = self._clock()
+            if tr is not None:
+                commit_us = tr.now_us()
+                tr.complete("host sync", sync_us, commit_us - sync_us,
+                            tid=TID_ENGINE)
 
-        # per-request speculation accounting, against the pre-commit
-        # slot->request mapping (commit retires finished slots)
-        for slot_id, rid in enumerate(slot_rids):
-            k = int(plan.draft_len[slot_id])
-            if rid is None or k == 0:
-                continue
-            rm = self._inflight[rid]
-            rm.proposed_tokens += k
-            rm.accepted_tokens += int(accept[slot_id])
+            # per-request speculation accounting, against the pre-commit
+            # slot->request mapping (commit retires finished slots)
+            for slot_id, rid in enumerate(slot_rids):
+                k = int(plan.draft_len[slot_id])
+                if rid is None or k == 0:
+                    continue
+                rm = self._inflight[rid]
+                rm.proposed_tokens += k
+                rm.accepted_tokens += int(accept[slot_id])
 
-        outcome = self.scheduler.commit(plan, token, accept)
+            # nonfinite-guard verdicts: token -1 flags a slot whose
+            # window logits held NaN/Inf.  Fail just that request —
+            # slot retired, pages reclaimed, partial output delivered —
+            # and zero its plan entry so commit() skips it; the rest of
+            # the batch continues untouched.
+            for slot_id, rid in enumerate(slot_rids):
+                if (rid is None or plan.valid[slot_id] == 0
+                        or token[slot_id] >= 0):
+                    continue
+                self._nonfinite.inc()
+                if tr is not None:
+                    tr.instant("nonfinite", tid=_slot_tid(slot_id),
+                               rid=rid)
+                slot = self.scheduler.evict(slot_id)
+                results.append(self._finish_request(
+                    rid, slot.req.prompt, list(slot.out), "failed", now,
+                    error="nonfinite logits in decode window"))
+                plan.valid[slot_id] = 0
+
+            outcome = self.scheduler.commit(plan, token, accept)
+        except Exception as err:
+            # commit/retire discipline under mid-tick failure: every
+            # request the plan touched is failed + retired, so an
+            # exception here can never leak pages or leave a slot busy
+            results.extend(self._fail_plan(plan, slot_rids, slot_objs,
+                                           err, self._clock()))
+            if isinstance(err, InjectedFault):
+                return results        # scripted fault: keep serving
+            raise
         first = set(outcome.first_token)
         for rid, _ in outcome.emitted:
             rm = self._inflight[rid]
@@ -323,15 +531,9 @@ class ServeEngine:
                 # tokens arrive together, so the gap spans the whole batch
                 self.stats.record_token_gap(now - rm.last_token_time)
             rm.last_token_time = now
-        results = []
         for _, slot in outcome.finished:
-            rm = self._inflight.pop(slot.req.request_id)
-            self._result_ids.add(slot.req.request_id)
-            rm.finish_time = now
-            rm.new_tokens = len(slot.out)
-            self.stats.record_finish(rm)
-            results.append(RequestResult(slot.req.request_id,
-                                         slot.req.prompt, slot.out, rm))
+            results.append(self._finish_request(
+                slot.req.request_id, slot.req.prompt, slot.out, "ok", now))
         if tr is not None:
             end_us = tr.now_us()
             tr.complete("commit", commit_us, end_us - commit_us,
@@ -342,7 +544,7 @@ class ServeEngine:
                         args={"kind": plan.kind})
             self._trace_slots(plan, slot_rids, accept, outcome,
                               dev_us, sync_us)
-        t_end = time.perf_counter()
+        t_end = self._clock()
         self.stats.record_step(
             plan.kind, self.scheduler.busy_slots + len(outcome.finished),
             outcome.n_tokens, t_end - t0,
@@ -350,8 +552,103 @@ class ServeEngine:
             decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0),
             proposed=plan.n_draft,
             accepted=int(accept.sum()))
-        self._results.extend(results)
         return results
+
+    # -- resilience internals -----------------------------------------------
+
+    def _finish_request(self, rid: int, prompt: List[int],
+                        tokens: List[int], status: str, now: float,
+                        error: Optional[str] = None) -> RequestResult:
+        """The single exit point for every terminal status: retire the
+        request's engine-side bookkeeping and deliver its result (partial
+        output included — never dropped)."""
+        rm = self._inflight.pop(rid)
+        self._result_ids.add(rid)
+        self._deadlines.pop(rid, None)
+        self._cancelled.discard(rid)
+        rm.finish_time = now
+        rm.new_tokens = len(tokens)
+        if error is not None:
+            rm.error = error
+        self.stats.record_finish(rm)
+        counter = {"cancelled": self._cancels, "timeout": self._timeouts,
+                   "failed": self._failures}.get(status)
+        if counter is not None:
+            counter.inc()
+        if self.tracer is not None and status != "ok":
+            self.tracer.instant(status, tid=TID_ENGINE, rid=rid)
+        result = RequestResult(rid, list(prompt), list(tokens), rm, status)
+        self._results.append(result)
+        return result
+
+    def _terminate(self, rid: int, status: str, now: float,
+                   error: Optional[str] = None) -> RequestResult:
+        """Retire a queued or in-flight request before completion —
+        reclaiming its slot and pages — with a terminal status."""
+        req = self.scheduler.remove_waiting(rid)
+        if req is not None:
+            # still queued; a preempted requeue carries partial output
+            return self._finish_request(rid, req.prompt,
+                                        list(req.resume_out or []),
+                                        status, now, error=error)
+        for slot_id, slot in enumerate(self.scheduler.slots):
+            if slot is not None and slot.req.request_id == rid:
+                self.scheduler.evict(slot_id)
+                return self._finish_request(rid, slot.req.prompt,
+                                            list(slot.out), status, now,
+                                            error=error)
+        raise RuntimeError(
+            f"request {rid} is tracked as in flight but sits in no "
+            f"queue or slot — engine/scheduler bookkeeping diverged")
+
+    def _sweep_cancelled(self, results: List[RequestResult]) -> None:
+        """Apply pending cancel() calls at the tick boundary."""
+        if not self._cancelled:
+            return
+        now = self._clock()
+        for rid in sorted(self._cancelled):
+            if rid in self._inflight:
+                results.append(self._terminate(rid, "cancelled", now))
+        self._cancelled.clear()
+
+    def _sweep_deadlines(self, results: List[RequestResult]) -> None:
+        """Retire every request whose deadline has passed (status
+        "timeout", partial output delivered)."""
+        if not self._deadlines:
+            return
+        now = self._clock()
+        expired = [rid for rid, t in self._deadlines.items()
+                   if now >= t and rid in self._inflight]
+        for rid in expired:
+            results.append(self._terminate(
+                rid, "timeout", now,
+                error=f"deadline exceeded at t={now:.3f}"))
+
+    def _fail_plan(self, plan, slot_rids, slot_objs, err: Exception,
+                   now: float) -> List[RequestResult]:
+        """Cleanup after an exception between the device step and the end
+        of commit: every request the plan touched is failed and its slot
+        retired.  Requests commit() finished before raising lost their
+        outcome with the exception, so they are failed too, with the
+        partial output the pre-commit snapshot recorded."""
+        failed = []
+        for slot_id, rid in enumerate(slot_rids):
+            if rid is None or plan.valid[slot_id] == 0:
+                continue
+            if rid not in self._inflight:
+                continue               # finished before the exception
+            slot = self.scheduler.slots[slot_id]
+            if slot is not None and slot.req.request_id == rid:
+                self.scheduler.evict(slot_id)
+                tokens = list(slot.out)
+            else:
+                # commit retired the slot before raising — fall back to
+                # the snapshot's view of the partial output
+                tokens = list(slot_objs[slot_id].out)
+            failed.append(self._finish_request(
+                rid, slot_objs[slot_id].req.prompt, tokens, "failed",
+                now, error=f"{type(err).__name__}: {err}"))
+        return failed
 
     def _trace_slots(self, plan, slot_rids, accept, outcome,
                      dev_us: float, sync_us: float) -> None:
@@ -397,16 +694,26 @@ class ServeEngine:
         are still waiting, no future tick can differ (admission is the
         only way forward and its inputs didn't change) — raise an
         actionable error naming the stuck requests instead of looping
-        forever.
+        forever.  Two resilience carve-outs: a request stuck only because
+        its deadline expired is *swept* (status "timeout") rather than
+        spun on — the sweep counts as progress and drain terminates —
+        and a fault injector with events still scheduled counts as
+        progress too (a scripted exhaustion window lifts at its
+        scheduled tick).
         """
         while self.scheduler.has_work:
             n_results = len(self._results)
             self.step()
             progressed = (self._last_tick_admitted
                           or self._last_tick_stepped
-                          or len(self._results) > n_results)
+                          or len(self._results) > n_results
+                          or (self.faults is not None
+                              and self.faults.pending))
             if not progressed:
                 stuck = [r.request_id for r in self.scheduler.waiting]
+                held = self.cache.held_pages
+                hint = (f"  ({held} pages are held by fault injection "
+                        f"with no scheduled release.)" if held else "")
                 raise RuntimeError(
                     f"ServeEngine.drain(): no progress — tick admitted "
                     f"nothing, stepped nothing, and retired nothing, but "
@@ -416,7 +723,7 @@ class ServeEngine:
                     f"pages free, {self.cache.max_pages_per_slot} max per "
                     f"slot); submit() should have rejected it — if it "
                     f"was enqueued by other means, resize the pool or "
-                    f"split the request.")
+                    f"split the request.{hint}")
         return sorted(self._results, key=lambda r: r.request_id)
 
     # -- telemetry exports --------------------------------------------------

@@ -1,0 +1,187 @@
+"""Seeded, scriptable fault injection at the ServeEngine's seams.
+
+The resilience layer's test harness: a :class:`FaultInjector` scripts
+failures against the exact seams the engine exposes, so the chaos suite
+(tests/test_serve_faults.py) can *prove* — not assume — that ``drain()``
+terminates with correct statuses and intact pool invariants under every
+schedule:
+
+- **NaN-poison a slot's logits** (:meth:`FaultInjector.poison_logits`) —
+  the engine threads a per-slot ``poison`` mask into its jitted step and
+  overwrites the poisoned slot's window logits with NaN *before* the
+  verifier, exercising the nonfinite-logit guard exactly the way a
+  quantized-path overflow would (MPX §3.3: half-precision failure modes
+  are detected and survived, not assumed away);
+- **force pool exhaustion** (:meth:`FaultInjector.exhaust_pool`) — holds
+  free pages out of the allocator for a scripted tick window
+  (:meth:`~repro.serve.cache.PagedKVCache.hold_pages`), the pressure that
+  makes admission stall and preemption-and-recompute fire;
+- **fail the Nth device step** (:meth:`FaultInjector.fail_device_step`) —
+  raises :class:`InjectedFault` in place of the jitted step, exercising
+  the tick's fail-the-plan cleanup path (slots retired, pages reclaimed,
+  partial output delivered with status ``"failed"``);
+- **freeze the clock past a deadline** (:class:`FakeClock` +
+  :meth:`FaultInjector.advance_clock`) — the engine accepts an injectable
+  clock, so deadline expiry is a scripted event, not a sleep.
+
+Everything is host-side and deterministic: schedules key on the engine
+tick index (``begin_tick`` advances it once per ``step()``), fired events
+land in :attr:`FaultInjector.log`, and the ``seed`` only feeds the
+``rng`` attribute tests may use to build randomized schedules — the
+injector itself never draws from it.  ``drain()`` treats an injector
+with :attr:`~FaultInjector.pending` scheduled events as forward progress
+(the fault that blocks this tick is scripted to lift later), so an
+exhaustion window cannot trip the no-progress guard before it closes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A scripted device-step failure.  The engine converts it into
+    status ``"failed"`` for the slots in flight and keeps serving; any
+    *other* exception on the same path gets the identical cleanup
+    (no leaked pages, no busy slots) and then propagates."""
+
+
+class FakeClock:
+    """Injectable engine clock: time moves only when the script says so.
+
+    Pass as ``ServeEngine(clock=...)`` (or via
+    ``FaultInjector(clock=...)``); ``advance()`` — directly or through a
+    scheduled :meth:`FaultInjector.advance_clock` — is the "freeze the
+    clock past a deadline" fault: a request's deadline expires at an
+    exact tick, with zero wall-time dependence.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clocks only move forward: advance({dt})")
+        self.t += dt
+
+
+class FaultInjector:
+    """Scriptable fault schedules keyed on the engine tick index.
+
+    Script first (``poison_logits`` / ``fail_device_step`` /
+    ``exhaust_pool`` / ``advance_clock`` — all chainable), then hand the
+    injector to ``ServeEngine(faults=...)``.  The engine drives the
+    hooks: ``begin_tick`` once at the top of every ``step()`` (applies
+    pool holds/releases and clock advances), ``poison_mask`` when
+    building the device batch, ``maybe_fail_step`` just before the
+    jitted step.  Fired events append ``(tick, kind, ...)`` tuples to
+    :attr:`log`.
+    """
+
+    def __init__(self, seed: int = 0, clock: Optional[FakeClock] = None):
+        self.rng = np.random.default_rng(seed)
+        self.clock = clock
+        self.tick = -1                      # advanced by begin_tick
+        self.log: List[Tuple] = []
+        self._poison: Dict[int, Optional[int]] = {}   # rid -> tick|None
+        self._fail_steps: Set[int] = set()
+        self._exhaust: List[dict] = []
+        self._advances: Dict[int, float] = {}
+
+    # -- scripting ----------------------------------------------------------
+
+    def poison_logits(self, rid: int,
+                      tick: Optional[int] = None) -> "FaultInjector":
+        """NaN-poison request ``rid``'s window logits — at ``tick``, or
+        (default) at every tick the request is live, which means its
+        first device step: the nonfinite guard fails it on detection."""
+        self._poison[int(rid)] = tick if tick is None else int(tick)
+        return self
+
+    def fail_device_step(self, tick: int) -> "FaultInjector":
+        """Raise :class:`InjectedFault` in place of tick ``tick``'s
+        device step (fires once)."""
+        self._fail_steps.add(int(tick))
+        return self
+
+    def exhaust_pool(self, from_tick: int, until_tick: Optional[int] = None,
+                     pages: Optional[int] = None) -> "FaultInjector":
+        """Hold ``pages`` free pages (all of them when None) out of the
+        pool from tick ``from_tick`` until tick ``until_tick`` (forever
+        when None — the permanent-wedge schedule)."""
+        if until_tick is not None and until_tick <= from_tick:
+            raise ValueError(
+                f"exhaust window [{from_tick}, {until_tick}) is empty")
+        self._exhaust.append({"from": int(from_tick), "until": until_tick,
+                              "pages": pages})
+        return self
+
+    def advance_clock(self, tick: int, dt: float) -> "FaultInjector":
+        """Advance the injected :class:`FakeClock` by ``dt`` seconds at
+        the top of tick ``tick`` (requires ``FaultInjector(clock=...)``)."""
+        self._advances[int(tick)] = self._advances.get(int(tick), 0.0) + dt
+        return self
+
+    @property
+    def pending(self) -> bool:
+        """True while scheduled events remain that could unblock future
+        ticks — ``drain()`` counts this as progress, so a scripted
+        exhaustion window doesn't trip the no-progress guard before its
+        scheduled release."""
+        if self._advances or self._fail_steps:
+            return True
+        for ex in self._exhaust:
+            if ex["from"] > self.tick:
+                return True
+            if ex["until"] is not None and ex["until"] > self.tick:
+                return True
+        return False
+
+    # -- engine-facing hooks ------------------------------------------------
+
+    def begin_tick(self, cache) -> None:
+        """Advance the tick counter and apply this tick's scheduled pool
+        holds/releases and clock advances.  Called once at the top of
+        every ``ServeEngine.step()``."""
+        self.tick += 1
+        dt = self._advances.pop(self.tick, None)
+        if dt is not None:
+            if self.clock is None:
+                raise RuntimeError(
+                    "advance_clock schedules need FaultInjector("
+                    "clock=FakeClock()) — there is no clock to advance")
+            self.clock.advance(dt)
+            self.log.append((self.tick, "clock", dt))
+        for ex in self._exhaust:
+            if ex["from"] == self.tick:
+                held = cache.hold_pages(ex["pages"])
+                self.log.append((self.tick, "exhaust", held))
+            if ex["until"] == self.tick:
+                released = cache.release_held()
+                self.log.append((self.tick, "release", released))
+
+    def poison_mask(self, slot_rids: Sequence[Optional[int]]) -> np.ndarray:
+        """(B,) bool: which slots' logits the jitted step NaN-poisons
+        this tick."""
+        mask = np.zeros(len(slot_rids), bool)
+        for b, rid in enumerate(slot_rids):
+            if rid is None or rid not in self._poison:
+                continue
+            when = self._poison[rid]
+            if when is None or when == self.tick:
+                mask[b] = True
+                self.log.append((self.tick, "poison", rid))
+        return mask
+
+    def maybe_fail_step(self) -> None:
+        """Raise :class:`InjectedFault` if this tick's device step is
+        scheduled to fail."""
+        if self.tick in self._fail_steps:
+            self._fail_steps.discard(self.tick)
+            self.log.append((self.tick, "fail_step"))
+            raise InjectedFault(
+                f"injected device-step failure at tick {self.tick}")

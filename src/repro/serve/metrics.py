@@ -47,6 +47,8 @@ class RequestMetrics:
     new_tokens: int = 0
     proposed_tokens: int = 0    # speculative drafts the verifier saw
     accepted_tokens: int = 0    # drafts the verifier accepted
+    preemptions: int = 0        # times evicted + recomputed mid-flight
+    error: Optional[str] = None  # why status == "failed", else None
 
     @property
     def acceptance_rate(self) -> Optional[float]:

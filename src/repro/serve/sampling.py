@@ -210,6 +210,28 @@ def rejection_sample(logits: jnp.ndarray, draft: jnp.ndarray,
     return accept.astype(jnp.int32), token.astype(jnp.int32)
 
 
+def guard_nonfinite(logits: jnp.ndarray, accept: jnp.ndarray,
+                    token: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nonfinite-logit guard over the (B, W, V) window logits.
+
+    A NaN/Inf in a slot's window — a quantized-path overflow, a poisoned
+    weight — would otherwise be silently argmax'd into the token stream
+    (``jnp.argmax`` over an all-NaN row returns 0: a plausible-looking
+    token id).  The MPX discipline is that half-precision failure modes
+    are *detected*, not assumed away: this masks any slot whose window
+    contains a nonfinite value to ``accept = 0`` and ``token = -1``, the
+    host-side failure sentinel — real token ids are nonnegative, so the
+    verdict rides the two ``(B,)`` arrays the engine step already
+    transfers.  Detection costs one elementwise ``isfinite`` reduce on
+    device and **zero added host syncs** (the tests/test_obs.py
+    transfer-count pin holds with the guard compiled in).
+    """
+    bad = jnp.any(~jnp.isfinite(logits.astype(jnp.float32)), axis=(1, 2))
+    return (jnp.where(bad, 0, accept).astype(accept.dtype),
+            jnp.where(bad, -1, token).astype(token.dtype))
+
+
 def make_verifier(sp: SamplingParams):
     """Returns a jittable ``verify(logits (B, W, V), draft (B, W-1),
     draft_len (B,), key) -> (accept (B,), token (B,))`` closure over the

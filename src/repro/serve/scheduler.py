@@ -22,6 +22,18 @@ corrected/bonus token from rejection sampling) and rolls the slot's cache
 length back over the rejected tail (:meth:`PagedKVCache.truncate` — the
 dead KV positions are overwritten by the next window, no page churn).
 
+Admission is backstopped by vLLM-style **preemption and recompute**:
+when the pool can't cover the head request's reservation but a slot is
+free, the youngest decoding slot is evicted — pages freed, recurrent
+state claim dropped — and its request requeued with its committed tokens
+as a recompute prefill (the ordinary chunked-prefill path re-feeds
+prompt + output and resumes decoding exactly where it stopped; greedy
+output is token-identical to the unpreempted run).  Long-prompt traffic
+can therefore no longer wedge the engine behind in-flight decodes; the
+cost is recomputing the victim's KV, which the engine counts
+(``serve_preemptions_total``) and the bench prices
+(``serving_preempt_recompute_overhead_pct``).
+
 Decode slots keep emitting tokens while other slots are mid-prefill —
 there is no prefill-priority phase in which in-flight generations stall
 behind a long prompt (Orca-style iteration-level scheduling).  A per-step
@@ -51,10 +63,20 @@ IDLE, PREFILL, DECODE = 0, 1, 2
 
 @dataclasses.dataclass
 class Request:
-    """One generation request.  ``prompt`` is a list of token ids."""
+    """One generation request.  ``prompt`` is a list of token ids.
+
+    ``resume_out`` is set only on the requeued copy of a *preempted*
+    request: the tokens it had already committed when its slot was
+    evicted.  On re-admission the slot recomputes their KV through the
+    ordinary chunked-prefill path (prompt + committed output re-fed as
+    one long "prompt") and then resumes decoding exactly where it left
+    off — the total token budget (``prompt + max_new``) is unchanged, so
+    the page reservation is identical to the original admission.
+    """
     request_id: int
     prompt: List[int]
     max_new: int = 32
+    resume_out: Optional[List[int]] = None
 
     def __post_init__(self):
         if not self.prompt:
@@ -66,7 +88,8 @@ class Request:
 @dataclasses.dataclass
 class _Slot:
     req: Request
-    fed: int = 0          # prompt tokens written to the cache so far
+    seq: int = 0          # admission sequence number (preemption order)
+    fed: int = 0          # feed tokens written to the cache so far
     length: int = 0       # committed cached tokens (prompt + accepted gen)
     out: List[int] = dataclasses.field(default_factory=list)
     next_token: int = -1  # sampled but not yet fed to a decode step
@@ -75,7 +98,15 @@ class _Slot:
     ctx: List[int] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
-        self.ctx = list(self.req.prompt)
+        self.out = list(self.req.resume_out or [])
+        self.resumed = bool(self.req.resume_out)
+        self.ctx = list(self.req.prompt) + self.out
+        # the token stream to (re)prefill.  For a fresh request: the
+        # prompt.  For a preempted one: prompt + committed output minus
+        # the final sampled token, whose KV was never written — it is
+        # re-fed as the first decode token after the recompute prefill
+        # (commit() restores it as next_token instead of sampling anew).
+        self.feed = self.ctx[:-1] if self.resumed else list(self.req.prompt)
 
     def emit(self, tokens: List[int]) -> None:
         """Append committed generation tokens (keeps ctx == prompt+out)."""
@@ -84,7 +115,7 @@ class _Slot:
 
     @property
     def prefilling(self) -> bool:
-        return self.fed < len(self.req.prompt)
+        return self.fed < len(self.feed)
 
     @property
     def done(self) -> bool:
@@ -153,6 +184,7 @@ class Scheduler:
                  max_batched_tokens: Optional[int] = None,
                  spec_tokens: int = 0,
                  proposer: Optional[Proposer] = None,
+                 preempt: bool = True,
                  registry=None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
@@ -188,13 +220,15 @@ class Scheduler:
                 f"n_slots {self.n_slots}")
         self.max_batched_tokens = max_batched_tokens
         self.max_seq = cache.max_seq
+        self.preempt = preempt
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Slot]] = [None] * self.n_slots
         self._active_ids: Set[int] = set()   # queued or in-flight
+        self._admit_seq = 0                  # preemption picks the youngest
         # telemetry (repro.obs): queue depth + admission counters, all
         # host ints updated where the bookkeeping already mutates
         self._queue_gauge = self._busy_gauge = None
-        self._admissions = self._submitted = None
+        self._admissions = self._submitted = self._preemptions = None
         if registry is not None:
             self._queue_gauge = registry.gauge(
                 "serve_queue_depth", "requests waiting for a slot")
@@ -204,6 +238,10 @@ class Scheduler:
                 "serve_admissions_total", "requests placed into slots")
             self._submitted = registry.counter(
                 "serve_submitted_total", "requests accepted into the queue")
+            self._preemptions = registry.counter(
+                "serve_preemptions_total",
+                "decoding slots evicted under pool pressure (recompute "
+                "requeued)")
 
     # -- admission / eviction -----------------------------------------------
 
@@ -232,30 +270,127 @@ class Scheduler:
             self._submitted.inc()
             self._queue_gauge.set(len(self.waiting))
 
-    def admit(self) -> List[int]:
-        """Place waiting requests into free slots, FCFS.
+    def admit(self) -> Tuple[List[int], List[int]]:
+        """Place waiting requests into free slots, FCFS; preempt under
+        pool pressure.
 
         Stops at the first request whose page reservation doesn't fit
         (head-of-line order preserved — large requests are not starved by
-        later small ones).  Returns the admitted request ids.
+        later small ones).  When the head can't fit but ``preempt`` is on,
+        the youngest *decoding* slot whose pages would cover the shortfall
+        is evicted first (at most one eviction per tick): its pages return
+        to the pool, its recurrent state claim is dropped, and the request
+        requeues just behind the head with its committed tokens carried as
+        a recompute prefill (:attr:`Request.resume_out`).  Restricting
+        victims to decoding (never prefilling) slots makes the worst-case
+        ping-pong terminate: every preemption cycle the victim has
+        committed at least one more token than the last time it ran.
+
+        Returns ``(admitted request ids, preempted request ids)``.
         """
-        admitted = []
+        admitted: List[int] = []
+        preempted: List[int] = []
         for slot_id in range(self.n_slots):
             if self.slots[slot_id] is not None or not self.waiting:
                 continue
             req = self.waiting[0]
-            if not self.cache.admit(slot_id,
-                                    len(req.prompt) + req.max_new):
+            total = len(req.prompt) + req.max_new
+            ok = self.cache.admit(slot_id, total)
+            if not ok and self.preempt and not preempted:
+                victim = self._preempt_victim(total)
+                if victim is not None:
+                    preempted.append(self._preempt(victim))
+                    ok = self.cache.admit(slot_id, total)
+            if not ok:
                 break
             self.waiting.popleft()
-            self.slots[slot_id] = _Slot(req)
+            self.slots[slot_id] = _Slot(req, seq=self._admit_seq)
+            self._admit_seq += 1
             admitted.append(req.request_id)
         if self._admissions is not None:
             if admitted:
                 self._admissions.inc(len(admitted))
             self._queue_gauge.set(len(self.waiting))
             self._busy_gauge.set(self.busy_slots)
-        return admitted
+        return admitted, preempted
+
+    def _preempt_victim(self, n_tokens: int) -> Optional[int]:
+        """The youngest decoding slot whose pages, returned to the pool,
+        would let a request of ``n_tokens`` total tokens admit; None when
+        no such slot exists (caller then leaves the head waiting).
+
+        A slot is only a victim once it has committed at least one token
+        *beyond* what it resumed with — preemption terminates because
+        every eviction strictly grows the victim's committed output.
+        Without that guard two requests sharing a too-small pool
+        ping-pong forever: a recompute prefill re-derives exactly the
+        tokens it resumed with (its final sample is discarded), so the
+        freshly resumed slot would look like a zero-progress victim
+        again at the very next tick's admit.
+        """
+        if not self.cache.has_paged:
+            return None      # page-free stacks have no pool to pressure
+        need = self.cache.pages_for(n_tokens)
+        if need > self.cache.max_pages_per_slot:
+            return None      # never admittable; preemption can't help
+        best = None
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None or slot.prefilling:
+                continue
+            if len(slot.out) <= len(slot.req.resume_out or ()):
+                continue     # no progress since resume — not evictable
+            if best is None or slot.seq > self.slots[best].seq:
+                best = slot_id
+        if best is None:
+            return None
+        if need > self.cache.free_pages + self.cache.slot_pages(best):
+            return None
+        return best
+
+    def _preempt(self, slot_id: int) -> int:
+        """Evict a decoding slot: free its pages / drop its recurrent
+        state claim, and requeue the request with its committed tokens as
+        a recompute prefill.  The requeued copy goes just *behind* the
+        current head (the request whose admission forced the eviction),
+        otherwise preserving FCFS order, and the id stays active — the
+        engine's metrics entry survives across the eviction.  The
+        proposer memo is kept: the context tokens are unchanged, only
+        their KV is recomputed.  Returns the preempted request id.
+        """
+        slot = self.slots[slot_id]
+        self.cache.retire(slot_id)
+        self.slots[slot_id] = None
+        req = dataclasses.replace(slot.req, resume_out=list(slot.out))
+        self.waiting.insert(min(1, len(self.waiting)), req)
+        if self._preemptions is not None:
+            self._preemptions.inc()
+            self._queue_gauge.set(len(self.waiting))
+            self._busy_gauge.set(self.busy_slots)
+        return slot.req.request_id
+
+    def remove_waiting(self, rid: int) -> Optional[Request]:
+        """Pull a queued request out of the waiting queue (cancellation /
+        deadline expiry before admission).  Returns the removed request —
+        its ``resume_out`` carries any preempted partial output — or None
+        if ``rid`` is not waiting."""
+        for i, req in enumerate(self.waiting):
+            if req.request_id == rid:
+                del self.waiting[i]
+                self._active_ids.discard(rid)
+                if self.proposer is not None and hasattr(self.proposer,
+                                                         "forget"):
+                    self.proposer.forget(rid)
+                if self._queue_gauge is not None:
+                    self._queue_gauge.set(len(self.waiting))
+                return req
+        return None
+
+    def evict(self, slot_id: int) -> _Slot:
+        """Retire a slot before completion (cancellation, deadline
+        expiry, nonfinite guard, mid-tick failure): pages reclaimed, id
+        released, proposer memo dropped.  Returns the evicted slot —
+        partial output on ``slot.out``."""
+        return self._retire(slot_id)
 
     def _retire(self, slot_id: int) -> _Slot:
         slot = self.slots[slot_id]
@@ -310,8 +445,8 @@ class Scheduler:
         for slot_id, slot in enumerate(self.slots):
             if slot is None or not slot.prefilling or budget <= 0:
                 continue
-            take = min(c, len(slot.req.prompt) - slot.fed, budget)
-            tokens[slot_id, :take] = slot.req.prompt[slot.fed:slot.fed + take]
+            take = min(c, len(slot.feed) - slot.fed, budget)
+            tokens[slot_id, :take] = slot.feed[slot.fed:slot.fed + take]
             start[slot_id] = slot.fed
             valid[slot_id] = take
             kinds[slot_id] = PREFILL
@@ -383,12 +518,25 @@ class Scheduler:
                 slot.fed += int(plan.valid[slot_id])
                 slot.length = slot.fed
                 self.cache.truncate(slot_id, slot.length)
-                if not slot.prefilling:    # prompt fully cached: the last
-                    tok = int(sampled[slot_id])  # position's logits sampled
-                    slot.emit([tok])
-                    slot.next_token = tok
-                    first_token.append(rid)
-                    emitted.append((rid, 1))
+                if not slot.prefilling:
+                    if slot.resumed:
+                        # recompute prefill of a preempted request: the
+                        # committed tokens are already on slot.out — the
+                        # step's sampled token is discarded (greedy: it
+                        # equals out[-1]) and decoding resumes by re-
+                        # feeding the final committed token, whose KV the
+                        # original run never wrote either.  No emit, no
+                        # first-token: the client saw these tokens already.
+                        slot.next_token = slot.out[-1]
+                        slot.resumed = False
+                    else:
+                        # prompt fully cached: the last position's logits
+                        # sampled the first generated token
+                        tok = int(sampled[slot_id])
+                        slot.emit([tok])
+                        slot.next_token = tok
+                        first_token.append(rid)
+                        emitted.append((rid, 1))
             else:
                 a = int(accept[slot_id])
                 if a > int(plan.draft_len[slot_id]):

@@ -1,0 +1,447 @@
+"""Chaos suite for the repro.serve resilience layer.
+
+Drives the :mod:`repro.serve.faults` injector against a small engine to
+prove the tentpole guarantees: ``drain()`` terminates with correct
+statuses under every scripted fault schedule (NaN-poisoned logits, pool
+exhaustion, deadline expiry, mid-tick exceptions), pool invariants hold
+throughout, every submitted id gets exactly one result, and unfaulted
+greedy output stays token-identical to the no-fault run even while
+batch neighbors are preempted or killed.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import mpx, serve
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+pytestmark = pytest.mark.serve
+
+CFG = ModelConfig(
+    name="faults-test", family="dense",
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab_size=128, pattern=("attn",), mlp="swiglu",
+    tie_embeddings=True, remat="none",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), CFG))
+
+
+def make_engine(params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunk_size", 16)
+    return serve.ServeEngine(CFG, params, **kw)
+
+
+def prompts_of(n, seed=0, length=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, CFG.vocab_size, length).tolist()
+            for _ in range(n)]
+
+
+def drive(engine, prompts, max_new=8, **submit_kw):
+    for p in prompts:
+        engine.submit(p, max_new=max_new, **submit_kw)
+    return {r.request_id: r for r in engine.drain()}
+
+
+def assert_pool_clean(engine):
+    engine.cache.check_invariants()
+    assert engine.cache.free_pages == engine.cache.num_pages
+    assert engine.scheduler.busy_slots == 0
+
+
+# --------------------------------------------------------------------------
+# nonfinite-logit guard
+# --------------------------------------------------------------------------
+
+def test_nonfinite_guard_fails_only_the_poisoned_request(params):
+    prompts = prompts_of(3, seed=1)
+    base = drive(make_engine(params, n_slots=3), prompts)
+    faults = serve.FaultInjector().poison_logits(1)
+    eng = make_engine(params, n_slots=3, faults=faults)
+    res = drive(eng, prompts)
+    assert res[1].status == "failed"
+    assert res[1].metrics.error == "nonfinite logits in decode window"
+    # neighbors in the same batch: untouched, token-identical
+    for rid in (0, 2):
+        assert res[rid].status == "ok"
+        assert res[rid].tokens == base[rid].tokens
+    assert_pool_clean(eng)
+    snap = eng.metrics_snapshot()
+    assert snap["serve_nonfinite_total"] == 1
+    assert snap["serve_failed_total"] == 1
+    assert any(ev[1] == "poison" for ev in faults.log)
+
+
+def test_nonfinite_guard_mid_decode_delivers_partial_output(params):
+    # poison at a decode tick (after the first token) — partial output
+    # must be delivered with the failure, never dropped
+    faults = serve.FaultInjector().poison_logits(0, tick=3)
+    eng = make_engine(params, faults=faults)
+    res = drive(eng, prompts_of(1), max_new=32)
+    assert res[0].status == "failed"
+    assert 0 < len(res[0].tokens) < 32
+    assert_pool_clean(eng)
+
+
+def test_nonfinite_guard_adds_zero_device_syncs(params, monkeypatch):
+    """The transfer-count pin holds with the guard compiled in AND a
+    poison schedule active: still exactly two device->host arrays per
+    step (accept / token) — the verdict rides them."""
+    import repro.serve.engine as eng_mod
+
+    class CountingNp:
+        def __init__(self, real):
+            self._real = real
+            self.asarray_calls = 0
+
+        def __getattr__(self, name):
+            return getattr(self._real, name)
+
+        def asarray(self, *a, **k):
+            self.asarray_calls += 1
+            return self._real.asarray(*a, **k)
+
+    proxy = CountingNp(np)
+    faults = serve.FaultInjector().poison_logits(0, tick=2)
+    engine = make_engine(params, faults=faults)
+    monkeypatch.setattr(eng_mod, "np", proxy)
+    engine.submit([1, 2, 3], max_new=8)
+    per_step = []
+    while engine.scheduler.has_work:
+        before = proxy.asarray_calls
+        engine.step()
+        per_step.append(proxy.asarray_calls - before)
+    stepped = [n for n in per_step if n]    # post-kill ticks run no step
+    assert stepped and all(n == 2 for n in stepped), per_step
+    results = sorted(engine._results, key=lambda r: r.request_id)
+    assert [r.status for r in results] == ["failed"]
+
+
+# --------------------------------------------------------------------------
+# deadlines and cancellation
+# --------------------------------------------------------------------------
+
+def test_deadline_expires_in_flight_with_partial_output(params):
+    clock = serve.FakeClock()
+    faults = serve.FaultInjector(clock=clock).advance_clock(3, 10.0)
+    eng = make_engine(params, faults=faults)
+    res = drive(eng, prompts_of(1), max_new=32, deadline_ms=500)
+    assert res[0].status == "timeout"
+    assert 0 < len(res[0].tokens) < 32
+    assert_pool_clean(eng)
+    assert eng.metrics_snapshot()["serve_timeouts_total"] == 1
+
+
+def test_deadline_expires_while_waiting(params):
+    # pool exhausted by the injector, so the request never admits; the
+    # deadline sweep must retire it (empty output) instead of spinning
+    clock = serve.FakeClock()
+    faults = (serve.FaultInjector(clock=clock)
+              .exhaust_pool(0, until_tick=40)
+              .advance_clock(2, 1.0))
+    eng = make_engine(params, faults=faults)
+    res = drive(eng, prompts_of(1), max_new=4, deadline_ms=100)
+    assert res[0].status == "timeout"
+    assert res[0].tokens == []
+    eng.cache.release_held()
+    assert_pool_clean(eng)
+
+
+def test_cancel_waiting_and_in_flight(params):
+    eng = make_engine(params)
+    p = prompts_of(3, seed=2)
+    r0 = eng.submit(p[0], max_new=32)
+    r1 = eng.submit(p[1], max_new=4)
+    r2 = eng.submit(p[2], max_new=4)      # waits: both slots busy
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(r0) is True          # in flight
+    assert eng.cancel(r2) is True          # still waiting
+    assert eng.cancel(999) is False        # unknown
+    res = {r.request_id: r for r in eng.drain()}
+    assert res[r0].status == "cancelled"
+    assert 0 < len(res[r0].tokens) < 32    # partial output delivered
+    assert res[r1].status == "ok" and len(res[r1].tokens) == 4
+    assert res[r2].status == "cancelled" and res[r2].tokens == []
+    assert eng.cancel(r1) is False         # finished: result stands
+    assert_pool_clean(eng)
+    assert eng.metrics_snapshot()["serve_cancelled_total"] == 2
+
+
+# --------------------------------------------------------------------------
+# bounded admission
+# --------------------------------------------------------------------------
+
+def test_engine_overloaded_backpressure(params):
+    eng = make_engine(params, n_slots=1, max_queue=2)
+    p = prompts_of(1)[0]
+    eng.submit(p, max_new=2)
+    eng.submit(p, max_new=2)
+    with pytest.raises(serve.EngineOverloaded) as ei:
+        eng.submit(p, max_new=2)
+    assert ei.value.queue_depth == 2
+    assert ei.value.max_queue == 2
+    assert ei.value.est_wait_s is None     # no throughput history yet
+    assert "back off" in str(ei.value)
+    res = eng.drain()
+    assert [r.status for r in res] == ["ok", "ok"]
+    # with history, the estimate is populated
+    eng.submit(p, max_new=2, request_id=10)
+    eng.submit(p, max_new=2, request_id=11)
+    with pytest.raises(serve.EngineOverloaded) as ei:
+        eng.submit(p, max_new=2, request_id=12)
+    assert ei.value.est_wait_s is not None and ei.value.est_wait_s > 0
+    eng.drain()
+
+
+# --------------------------------------------------------------------------
+# preemption & recompute
+# --------------------------------------------------------------------------
+
+def test_preemption_recompute_is_token_identical(params):
+    prompts = prompts_of(2, seed=3)
+    ample = make_engine(params)            # default pool: never preempts
+    base = drive(ample, prompts)
+    # never-incremented counters export no series
+    assert ample.metrics_snapshot().get("serve_preemptions_total", 0) == 0
+    # 3 pages for two requests needing 2 pages each: the second can only
+    # admit by evicting the first, which then recomputes
+    eng = make_engine(params, num_pages=3)
+    res = drive(eng, prompts)
+    assert all(r.status == "ok" for r in res.values())
+    for rid, r in res.items():
+        assert r.tokens == base[rid].tokens, f"rid {rid} diverged"
+    snap = eng.metrics_snapshot()
+    assert snap["serve_preemptions_total"] >= 1
+    assert (sum(r.metrics.preemptions for r in res.values())
+            == snap["serve_preemptions_total"])
+    # recompute has a visible step cost — only when preemption fires
+    assert eng.stats.steps > ample.stats.steps
+    assert_pool_clean(eng)
+
+
+def test_scheduler_preempts_youngest_decoding_slot():
+    cache = serve.PagedKVCache(CFG, n_slots=3, max_seq=64, page_size=8,
+                               num_pages=6)
+    sched = serve.Scheduler(cache, chunk_size=8)
+    sched.submit(serve.Request(0, [1] * 8, max_new=8))    # 2 pages
+    sched.submit(serve.Request(1, [1] * 8, max_new=8))    # 2 pages
+    admitted, preempted = sched.admit()
+    assert admitted == [0, 1] and preempted == []
+    for slot in sched.slots[:2]:           # mark both as decoding
+        slot.fed = len(slot.feed)
+        slot.length = slot.fed
+        slot.emit([5])
+        slot.next_token = 5
+    sched.submit(serve.Request(2, [1] * 8, max_new=16))   # 3 pages > 2 free
+    admitted, preempted = sched.admit()
+    assert admitted == [2]
+    assert preempted == [1]                # youngest decoding slot evicted
+    requeued = sched.waiting[0]
+    assert requeued.request_id == 1 and requeued.resume_out == [5]
+    # the resumed slot recomputes prompt KV, then re-feeds its last token
+    slot = serve.scheduler._Slot(requeued)
+    assert slot.resumed and slot.out == [5]
+    assert slot.feed == requeued.prompt    # out[:-1] is empty here
+    cache.check_invariants()
+
+
+def test_no_preemption_of_prefilling_slots():
+    cache = serve.PagedKVCache(CFG, n_slots=2, max_seq=64, page_size=8,
+                               num_pages=3)
+    sched = serve.Scheduler(cache, chunk_size=8)
+    sched.submit(serve.Request(0, [1] * 8, max_new=8))
+    sched.submit(serve.Request(1, [1] * 8, max_new=8))
+    admitted, preempted = sched.admit()
+    assert admitted == [0] and preempted == []
+    # slot 0 is still prefilling: not a preemption victim, so request 1
+    # waits (evicting a prefill would make no progress at all)
+    admitted, preempted = sched.admit()
+    assert admitted == [] and preempted == []
+    assert sched.slots[0].req.request_id == 0
+
+
+# --------------------------------------------------------------------------
+# device-step and commit failures
+# --------------------------------------------------------------------------
+
+def test_injected_device_step_failure_fails_the_plan(params):
+    faults = serve.FaultInjector().fail_device_step(2)
+    eng = make_engine(params, faults=faults)
+    res = drive(eng, prompts_of(2, seed=4), max_new=6)
+    assert all(r.status == "failed" for r in res.values())
+    assert all("InjectedFault" in r.metrics.error for r in res.values())
+    assert all(len(r.tokens) > 0 for r in res.values())   # partial output
+    assert_pool_clean(eng)
+    # the engine keeps serving after the scripted fault
+    rid = eng.submit(prompts_of(1)[0], max_new=3)
+    after = {r.request_id: r for r in eng.drain()}
+    assert after[rid].status == "ok" and len(after[rid].tokens) == 3
+
+
+def test_commit_failure_cannot_leak_pages_or_slots(params):
+    eng = make_engine(params)
+    rid = eng.submit(prompts_of(1, seed=5)[0], max_new=6)
+    eng.step()                             # prefill + first token
+
+    def bad_commit(plan, sampled, accept=None):
+        raise RuntimeError("synthetic commit failure")
+
+    orig, eng.scheduler.commit = eng.scheduler.commit, bad_commit
+    with pytest.raises(RuntimeError, match="synthetic commit failure"):
+        eng.step()
+    eng.scheduler.commit = orig
+    # the regression the try/except exists for: no leaked pages, no
+    # busy slot, invariants intact, partial output delivered as "failed"
+    assert_pool_clean(eng)
+    res = {r.request_id: r for r in eng.drain()}
+    assert res[rid].status == "failed"
+    assert "synthetic commit failure" in res[rid].metrics.error
+    assert len(res[rid].tokens) > 0
+    # and the engine still serves
+    rid2 = eng.submit(prompts_of(1)[0], max_new=2)
+    res = {r.request_id: r for r in eng.drain()}
+    assert res[rid2].status == "ok"
+
+
+def test_exception_after_partial_commit_still_cleans_up(params):
+    # the nastier shape: commit() completes its mutations (even retiring
+    # a finished slot) and THEN the tick raises — the snapshot path must
+    # still deliver every planned request exactly once
+    eng = make_engine(params)
+    r0 = eng.submit(prompts_of(1, seed=6)[0], max_new=1)   # finishes tick 0
+    r1 = eng.submit(prompts_of(1, seed=7)[0], max_new=8)
+    orig = eng.scheduler.commit
+
+    def commit_then_raise(plan, sampled, accept=None):
+        orig(plan, sampled, accept)
+        raise RuntimeError("post-commit failure")
+
+    eng.scheduler.commit = commit_then_raise
+    with pytest.raises(RuntimeError, match="post-commit failure"):
+        eng.step()
+    eng.scheduler.commit = orig
+    assert_pool_clean(eng)
+    res = {r.request_id: r for r in eng.drain()}
+    assert set(res) == {r0, r1}
+    assert res[r0].status == "failed" and len(res[r0].tokens) == 1
+    assert res[r1].status == "failed"
+
+
+# --------------------------------------------------------------------------
+# pool exhaustion windows + drain termination
+# --------------------------------------------------------------------------
+
+def test_pool_exhaustion_window_recovers(params):
+    faults = serve.FaultInjector().exhaust_pool(0, until_tick=3)
+    eng = make_engine(params, faults=faults)
+    res = drive(eng, prompts_of(1), max_new=4)
+    assert res[0].status == "ok" and len(res[0].tokens) == 4
+    kinds = [ev[1] for ev in faults.log]
+    assert "exhaust" in kinds and "release" in kinds
+    assert_pool_clean(eng)
+
+
+def test_drain_no_progress_guard_still_fires_without_deadline(params):
+    # satellite pin: the actionable no-progress error is preserved for a
+    # genuinely unadmittable request (no deadline to sweep it out)
+    eng = make_engine(params)
+    eng.scheduler.waiting.append(serve.Request(99, [1] * 8, max_new=1000))
+    with pytest.raises(RuntimeError, match=r"no progress.*\[99\]"):
+        eng.drain()
+
+
+def test_drain_terminates_when_only_expired_requests_wait(params):
+    # ...while the same unadmittable shape WITH a deadline terminates
+    # gracefully: the sweep converts the would-be spin into a timeout
+    clock = serve.FakeClock()
+    faults = (serve.FaultInjector(clock=clock)
+              .exhaust_pool(0, until_tick=30)
+              .advance_clock(1, 5.0))
+    eng = make_engine(params, faults=faults)
+    eng.submit(prompts_of(1)[0], max_new=4, deadline_ms=50)
+    res = eng.drain()
+    assert [r.status for r in res] == ["timeout"]
+
+
+# --------------------------------------------------------------------------
+# property test: random interleavings (satellite)
+# --------------------------------------------------------------------------
+
+def test_random_interleavings_one_result_per_id_invariants_hold(params):
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.data())
+    def run(data):
+        clock = serve.FakeClock()
+        faults = serve.FaultInjector(clock=clock)
+        eng = make_engine(params, num_pages=3, faults=faults)
+        submitted = []
+        n_ops = data.draw(st.integers(4, 14), label="n_ops")
+        for i in range(n_ops):
+            op = data.draw(st.sampled_from(
+                ["submit", "submit", "step", "step", "cancel", "poison",
+                 "advance"]), label=f"op{i}")
+            if op == "submit":
+                deadline = data.draw(
+                    st.one_of(st.none(), st.just(50.0)),
+                    label=f"deadline{i}")
+                rid = eng.submit(
+                    [1 + i % 31] * data.draw(st.integers(2, 8),
+                                             label=f"plen{i}"),
+                    max_new=data.draw(st.integers(1, 6),
+                                      label=f"new{i}"),
+                    deadline_ms=deadline)
+                submitted.append(rid)
+            elif op == "cancel" and submitted:
+                eng.cancel(data.draw(st.sampled_from(submitted),
+                                     label=f"cancel{i}"))
+            elif op == "poison" and submitted:
+                faults.poison_logits(
+                    data.draw(st.sampled_from(submitted),
+                              label=f"poison{i}"))
+            elif op == "advance":
+                clock.advance(data.draw(
+                    st.floats(0.0, 0.04, allow_nan=False),
+                    label=f"dt{i}"))
+            elif op == "step":
+                eng.step()
+                eng.cache.check_invariants()
+        results = eng.drain()
+        assert_pool_clean(eng)
+        assert sorted(r.request_id for r in results) == sorted(submitted)
+        valid = {"ok", "cancelled", "timeout", "failed"}
+        assert all(r.status in valid for r in results)
+
+    run()
+
+
+# --------------------------------------------------------------------------
+# bench schema
+# --------------------------------------------------------------------------
+
+def test_bench_schema_has_resilience_rows():
+    import pathlib
+    import sys
+    root = pathlib.Path(__file__).resolve().parents[1]
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    import importlib
+    sb = importlib.import_module("benchmarks.serving_bench")
+    names = sb.expected_row_names()
+    assert "serving_preempt_recompute_overhead_pct" in names
+    assert "serving_resilience_statuses" in names
