@@ -1,0 +1,125 @@
+"""Bench-regression guard: compare a fresh ``serving_bench.json``
+artifact against the committed ``benchmarks/baseline.json``.
+
+CI runs the serving bench and then this check, so two classes of
+regression fail the workflow loudly instead of silently drifting:
+
+- **schema drift** — a row present in the baseline but missing from the
+  run (or vice versa) means ``expected_row_names()`` changed without the
+  baseline being regenerated; downstream artifact consumers key on row
+  names, so both directions are errors.
+- **analytic-model drift** — the ``*hbm_bytes*`` rows are *computed*
+  (bytes the decode path touches per token), not measured: identical
+  inputs must give bit-identical values on any machine, so they are
+  compared **exactly**.  A change means the cost model changed — do it
+  deliberately and regenerate the baseline.
+
+Wall-clock rows (``serving_tok_*`` / ``serving_ttft_*`` /
+``serving_itl_*``) are measured on whatever hardware CI happens to run,
+so they get a deliberately loose *relative* tolerance (default 25x either
+way) that only catches catastrophic regressions — a hang, an accidental
+O(n^2) path, interpret-mode left on — not scheduler noise.  Everything
+else (ratios, percentages, counts) is checked for presence only; their
+meaningful bounds are asserted inside the bench itself.
+
+Regenerating the baseline after a deliberate change::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --json \
+        benchmarks/baseline.json
+
+Usage (as CI runs it)::
+
+    python -m benchmarks.check_regression serving_bench.json \
+        benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+#: wall-clock rows: measured us-per-token/latency values, hardware-bound
+WALLCLOCK_PREFIXES = ("serving_tok_", "serving_ttft_", "serving_itl_")
+
+#: default relative tolerance for wall-clock rows — loose on purpose:
+#: CI hardware varies run to run, the guard is for catastrophes
+DEFAULT_TOLERANCE = 25.0
+
+
+def _by_name(rows: List[dict]) -> dict:
+    names = [r["name"] for r in rows]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(f"duplicate row names: {sorted(dupes)}")
+    return {r["name"]: float(r["value"]) for r in rows}
+
+
+def compare(current: List[dict], baseline: List[dict],
+            tolerance: float = DEFAULT_TOLERANCE) -> List[str]:
+    """All violations (empty list = pass).
+
+    ``current`` / ``baseline`` are the bench's JSON row lists
+    (``[{"name": ..., "value": ..., "derived": ...}, ...]``).
+    """
+    if tolerance <= 1.0:
+        raise ValueError(f"tolerance must be > 1 (a ratio): {tolerance}")
+    cur, base = _by_name(current), _by_name(baseline)
+    errors = []
+    missing = sorted(set(base) - set(cur))
+    extra = sorted(set(cur) - set(base))
+    if missing:
+        errors.append(
+            f"schema drift: baseline rows missing from the run: {missing}")
+    if extra:
+        errors.append(
+            f"schema drift: run rows absent from the baseline: {extra} "
+            f"— regenerate benchmarks/baseline.json deliberately")
+    for name in sorted(set(cur) & set(base)):
+        c, b = cur[name], base[name]
+        if "hbm_bytes" in name:
+            if c != b:
+                errors.append(
+                    f"{name}: analytic bytes row drifted — baseline "
+                    f"{b!r}, run {c!r} (these are computed, not "
+                    f"measured: exact match required)")
+        elif name.startswith(WALLCLOCK_PREFIXES):
+            lo, hi = b / tolerance, b * tolerance
+            if not (lo <= c <= hi):
+                errors.append(
+                    f"{name}: wall-clock row {c:.1f} outside "
+                    f"[{lo:.1f}, {hi:.1f}] ({tolerance}x tolerance "
+                    f"around baseline {b:.1f})")
+    return errors
+
+
+def main(argv: List[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh serving_bench.json artifact")
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="relative tolerance (ratio) for wall-clock rows "
+                         f"(default {DEFAULT_TOLERANCE}x)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    errors = compare(current, baseline, tolerance=args.tolerance)
+    if errors:
+        print(f"bench regression check FAILED ({len(errors)} violation(s))")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_exact = sum(1 for r in baseline if "hbm_bytes" in r["name"])
+    n_wall = sum(1 for r in baseline
+                 if r["name"].startswith(WALLCLOCK_PREFIXES))
+    print(f"bench regression check passed: {len(baseline)} rows "
+          f"({n_exact} exact, {n_wall} wall-clock at "
+          f"{args.tolerance}x, rest presence-only)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

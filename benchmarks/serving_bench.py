@@ -66,6 +66,16 @@ reports the count of distinct terminal statuses with the per-status
 tally in the derived column.  ``--fault-trace`` exports the chaos
 drive's Chrome trace for CI to archive beside the JSON rows.
 
+The ``serving_prefix_*`` rows price refcounted prefix-page sharing on a
+repeated-prefix workload (a hot 7-page system prompt, short distinct
+suffixes): ``serving_prefix_ttft_hot_ratio`` (hot-request TTFT with the
+cache on as a fraction of the no-sharing baseline — one chunk step
+instead of the whole prompt), ``serving_prefix_prefill_tokens_hot``
+(prefill tokens actually fed — the cached prefix is skipped entirely,
+asserted structurally), and ``serving_prefix_pages_resident`` (one
+physical prefix copy serving every request, vs per-request page allocs
+without sharing).
+
 Row names are pinned by :func:`expected_row_names` — ``run()`` refuses
 to return a row set that drifted from it, and the fast schema test in
 ``tests/test_quant.py`` pins the trajectory-critical names, so a rename
@@ -102,6 +112,16 @@ SPEC_MAX_NEW = 32
 # e4m3; e3m4's bytes are identical (both 1 byte/elem + the same sidecar).
 KV_CELL = (("bf16", "bf16"), ("i8", "i8"), ("f8", "f8_e4m3"))
 
+# prefix-cache cell: repeated-prefix workload (hot system prompt).
+# PREFIX_LEN is page-aligned on purpose: 7 full pages register, and the
+# hot requests' short distinct suffixes are the only uncached feed.
+PREFIX_SLOTS = 2
+PREFIX_LEN = 112
+PREFIX_SUFFIX = 2
+PREFIX_REQUESTS = 6
+PREFIX_MAX_NEW = 8
+PREFIX_PAGE = 16
+
 
 def expected_row_names() -> list:
     """Every row ``run()`` emits, in order — the CI artifact schema.
@@ -128,6 +148,9 @@ def expected_row_names() -> list:
     names += [f"serving_tok_arch_{label}" for label, _ in _arch_cell_cfgs()]
     names += ["serving_preempt_recompute_overhead_pct",
               "serving_resilience_statuses"]
+    names += ["serving_prefix_ttft_hot_ratio",
+              "serving_prefix_prefill_tokens_hot",
+              "serving_prefix_pages_resident"]
     return names
 
 
@@ -468,6 +491,62 @@ def run(trace_path=None, metrics_path=None,
         " ".join(f"{k}={v}" for k, v in sorted(counts.items()))))
     if fault_trace_path:
         ftracer.export(fault_trace_path)
+
+    # -- prefix caching: repeated-prefix workload ---------------------------
+    # a hot 112-token (7-page) system prompt shared by every request,
+    # with 2-token distinct suffixes.  One warm request registers the
+    # prefix; the hot requests then admit with those pages mapped shared
+    # and prefill only their suffix — TTFT drops to roughly one chunk
+    # step regardless of prompt length, and the pool holds ONE copy of
+    # the prefix however many requests ride it.  Greedy output stays
+    # token-identical to the no-sharing run (pinned by
+    # tests/test_prefix_cache.py); these rows price the win.
+    hot_prefix = rng.integers(1, cfg.vocab_size, PREFIX_LEN).tolist()
+    hot_prompts = [
+        hot_prefix + rng.integers(1, cfg.vocab_size, PREFIX_SUFFIX).tolist()
+        for _ in range(PREFIX_REQUESTS)]
+    px_stats, px_engine = {}, {}
+    for label, pc in (("off", False), ("on", True)):
+        engine = serve.ServeEngine(
+            cfg, params, n_slots=PREFIX_SLOTS, max_seq=256,
+            page_size=PREFIX_PAGE, chunk_size=16, prefix_cache=pc)
+        engine.submit(list(hot_prefix), max_new=2)   # warm: compile, and
+        engine.drain()                               # (on) register prefix
+        engine.stats = serve.EngineStats(PREFIX_SLOTS)
+        for p in hot_prompts:                        # hot: sequential, so
+            engine.submit(list(p), max_new=PREFIX_MAX_NEW)
+            engine.drain()                           # TTFT is queue-free
+        px_stats[label] = engine.stats.summary()
+        px_engine[label] = engine
+    ratio = (px_stats["on"]["ttft_mean_s"]
+             / max(px_stats["off"]["ttft_mean_s"], 1e-9))
+    snap = px_engine["on"].metrics_snapshot()
+    rows.append((
+        "serving_prefix_ttft_hot_ratio", ratio,
+        f"hot ttft on={px_stats['on']['ttft_mean_s']*1e3:.1f}ms "
+        f"off={px_stats['off']['ttft_mean_s']*1e3:.1f}ms "
+        f"prefix={PREFIX_LEN}tok (target <=0.2x)"))
+    rows.append((
+        "serving_prefix_prefill_tokens_hot",
+        px_stats["on"]["prefill_tokens_fed"],
+        f"off={int(px_stats['off']['prefill_tokens_fed'])} — cached "
+        f"prefix skipped entirely; hits="
+        f"{int(snap['serve_prefix_hits_total'])} pages"))
+    # after the drives everything is retired, so the resident pages are
+    # exactly the cached prefix copy (used_pages counts non-free pages)
+    resident = px_engine["on"].cache.used_pages
+    off_allocs = px_engine["off"].cache.pages_for(
+        PREFIX_LEN + PREFIX_SUFFIX + PREFIX_MAX_NEW) * PREFIX_REQUESTS
+    rows.append((
+        "serving_prefix_pages_resident", float(resident),
+        f"one {PREFIX_LEN // PREFIX_PAGE}-page prefix copy serves "
+        f"{PREFIX_REQUESTS} requests (no sharing: {off_allocs} page-"
+        f"allocs); cow={int(snap['serve_cow_copies_total'])}"))
+    # the cell's structural claim — the hot requests fed only their
+    # suffixes (cached-prefix prefill tokens ~ 0, not just "fewer")
+    assert (px_stats["on"]["prefill_tokens_fed"]
+            <= PREFIX_REQUESTS * (PREFIX_SUFFIX + 1)), \
+        "prefix cache failed to absorb the shared prefix"
     check_rows(rows)     # the CI artifact schema is pinned — fail loudly
 
     if trace_path or metrics_path:

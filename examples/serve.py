@@ -87,6 +87,24 @@ the same engine configuration), not a property of the arrays.  Greedy
 outputs may differ from the bf16 baseline in near-tie tokens; logits
 stay within the tolerance pinned by tests/test_serve.py.
 
+**Prefix caching** (``--prefix-cache``): the paged pool refcounts pages
+and shares committed full pages across requests whose prompts start the
+same way.  Admission probes a rolling-hash prefix index — O(pages
+touched), not O(context) — maps every hit into the new slot's page
+table with a refcount bump, and chunked prefill skips the covered
+tokens entirely: a hot-prefix request pays prefill only for its unique
+suffix (the 112-token-prefix bench cell cuts hot TTFT to ~0.1x and
+prefill tokens from 684 to 12).  Writes stay sound via copy-on-write —
+a page is copied (values *and* quantized-format scale sidecars) before
+the first divergent write — so greedy output is token-identical with
+the flag on or off, for bf16 and quantized KV alike.  Retired pages
+park on an LRU list and are reclaimed before any live slot would be
+preempted.  This script prints per-request ``prefix=N`` skip counts and
+a hit/miss/COW/shared summary line.  Recurrent and hybrid stacks accept
+the flag but serve with it inert (recurrent state is a function of the
+whole history, not a page of it).  ``--no-prefix-cache`` is the
+explicit off switch (also the default).
+
 **Observability** (``repro.obs``): the engine always carries a metrics
 registry — queue depth, admissions, page-pool occupancy/peak, truncated
 speculative tokens, per-slot token counters and TTFT/ITL histograms —
@@ -125,6 +143,7 @@ Run: PYTHONPATH=src python examples/serve.py --requests 12 --slots 4 \
          --trace serve_trace.json --metrics-out metrics.prom
      PYTHONPATH=src python examples/serve.py --chaos --max-queue 8 \
          --deadline-ms 60000
+     PYTHONPATH=src python examples/serve.py --prefix-cache --requests 8
 """
 import argparse
 
@@ -182,6 +201,12 @@ def main():
                     help="KV-cache page storage format: bf16 passthrough "
                          "or quantized with per-page amax scales "
                          "(repro.quant; dequantized inside the kernel)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="share committed KV pages across requests with a "
+                         "common prompt prefix (refcounted, copy-on-write; "
+                         "greedy output is identical on/off); "
+                         "--no-prefix-cache is the explicit off switch")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the waiting queue: a full queue makes "
                          "submit() raise EngineOverloaded (typed "
@@ -231,15 +256,22 @@ def main():
         spec_tokens=args.spec_tokens,
         use_kernel=args.use_kernel, pages_per_block=args.pages_per_block,
         kv_dtype=args.kv_dtype,
+        prefix_cache=args.prefix_cache,
         max_queue=args.max_queue,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p),
         tracer=tracer, faults=faults)
 
     rng = np.random.default_rng(0)
+    # with --prefix-cache, give every request a shared "system prompt"
+    # spanning a few pages so the sharing layer has something to hit;
+    # requests still diverge on their random suffix
+    system = (rng.integers(1, cfg.vocab_size,
+                           3 * args.page_size).tolist()
+              if args.prefix_cache else [])
     for _ in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size,
-                              rng.integers(4, 12)).tolist()
+        prompt = system + rng.integers(1, cfg.vocab_size,
+                                       rng.integers(4, 12)).tolist()
         while True:
             try:
                 engine.submit(prompt, max_new=args.max_new,
@@ -264,11 +296,20 @@ def main():
         if res.metrics.error:
             tail += f" ({res.metrics.error})"
         ttft_s = f"ttft {ttft * 1e3:.0f}ms" if ttft is not None else "no ttft"
+        px = (f" prefix={res.metrics.cached_prefix_tokens}"
+              if res.metrics.cached_prefix_tokens else "")
         print(f"req {res.request_id:2d}: prompt[{len(res.prompt)}] -> "
               f"{len(res.tokens)} tokens: {res.tokens[:8]}... "
-              f"({ttft_s}{spec}){tail}")
+              f"({ttft_s}{spec}{px}){tail}")
     print("statuses: "
           + " ".join(f"{k}={v}" for k, v in sorted(statuses.items())))
+    if args.prefix_cache:
+        snap = engine.metrics_snapshot()
+        print(f"prefix cache: {int(snap['serve_prefix_hits_total'])} page "
+              f"hits, {int(snap['serve_prefix_miss_total'])} probe misses, "
+              f"{int(snap['serve_cow_copies_total'])} COW copies, "
+              f"{int(snap['serve_pages_shared'])} pages shared / "
+              f"{int(snap['serve_pages_cached'])} cached now")
 
     s = engine.stats.summary()
     print(f"\n{int(s['requests'])} requests, {int(s['new_tokens'])} tokens "

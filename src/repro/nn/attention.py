@@ -340,6 +340,16 @@ def paged_write(pages: jnp.ndarray, vals: jnp.ndarray,
     number of real tokens per slot (suffix is padding).  Padding tokens and
     slots whose table entry is the sentinel scatter out of bounds and are
     dropped.
+
+    Ownership contract: the caller must hold every targeted physical page
+    *exclusively* — this scatter mutates rows in place and knows nothing
+    about sharing.  Under prefix caching (``PagedStatePool`` with
+    ``prefix_cache=True``) pages can be referenced by several slots'
+    tables at once; the pool's ``note_write``/COW machinery copies any
+    shared page and repoints the writing slot *before* the write is
+    flushed, so by the time this function runs every targeted page has
+    refcount 1 again.  Bypassing the pool's write path breaks that
+    guarantee silently.
     """
     n_pages = pages.shape[0]
     b, c = positions.shape

@@ -111,6 +111,18 @@ def quantized_paged_write(pages: jnp.ndarray, scales: jnp.ndarray,
     speculative tail — either would silently inflate the fresh amax and
     crush the live rows' precision.  Zeroing them makes a page's scale a
     function of exactly the values that are reachable through it.
+
+    Ownership contract: this is a whole-page **read-modify-write** —
+    every touched page is dequantized, merged and requantized against a
+    fresh amax, so even rows this call doesn't write change bit pattern
+    (same values, new scale).  A physical page shared across slots via
+    prefix caching must therefore be copied-on-write *before* the
+    requantizing scatter reaches it — not merely before its rows
+    diverge — and the copy must carry the page's ``scales`` sidecar row
+    along with the values.  ``PagedStatePool`` enforces exactly this
+    (COW queued at admission boundaries and in ``note_write``, flushed
+    before the device step); callers going around the pool must not
+    target pages with refcount > 1.
     """
     fmt = resolve(fmt)
     n_pages = pages.shape[0]

@@ -32,7 +32,9 @@ dense bf16 image of it never exists.  Components:
   watermarks so speculative windows can write KV ahead and
   ``truncate()`` back to the accepted prefix with the invariants still
   checkable) and slot-indexed recurrent state for rglru/ssd layers
-  (init-reset on admit; ``check_invariants`` catches stale-state leaks)
+  (init-reset on admit; ``check_invariants`` catches stale-state leaks);
+  with ``prefix_cache=True`` the pool additionally refcounts pages and
+  shares committed full pages across slots (see *Prefix sharing* below)
 - :mod:`~repro.serve.scheduler` — continuous batching with *mixed*
   prefill+decode chunk steps: every tick each active slot contributes
   either its next prefill chunk or its decode window under a per-step
@@ -98,6 +100,48 @@ With temperature 0 the accept rule is argmax equality, so the greedy
 speculative engine is token-identical to the non-speculative engine —
 speculation changes step count, never output.
 
+**Prefix sharing** (``ServeEngine(prefix_cache=True)``) — the page pool
+grows a refcounted, copy-on-write sharing layer so requests with a
+common prompt prefix map the same physical KV pages instead of
+recomputing and re-storing them:
+
+- Every page carries a **refcount** equal to the number of page-table
+  entries pointing at it; a page is *free*, *held* (fault injection),
+  *referenced* (refcount >= 1) or *cached* (refcount 0 but still
+  indexed, parked on an LRU list) — ``check_invariants()`` proves the
+  four states partition the pool every tick, so no page can be
+  simultaneously free and referenced.
+- A **prefix index** keys committed full pages by a rolling chained
+  hash of their token ids (per model config / kv-format / page size, so
+  incompatible pools never alias).  Admission probes the index with the
+  new request's prompt — O(pages touched), the chain digest per slot is
+  incremental — maps every hit into the slot's page table with a
+  refcount bump, and tells chunked prefill to **skip** the covered
+  tokens: the hot-prefix request pays prefill only for its unique
+  suffix.  ``RequestMetrics.cached_prefix_tokens`` records the skip.
+- Writes keep sharing sound via **copy-on-write**: before any write
+  lands on a page with refcount > 1 (or on a resident cached page the
+  slot got at a page-aligned admission boundary), the pool allocates a
+  fresh page, queues a device-side page copy — value pages *and* the
+  fp32 amax-scale sidecars of quantized formats, since quantized
+  scatter is a whole-page read-modify-write — and repoints only the
+  writing slot.  ``flush_cow()`` executes the queued copies as one
+  batched donated jit before the engine's device step, so greedy output
+  is token-identical with the cache on or off, bf16 and int8 alike
+  (pinned by tests/test_prefix_cache.py).
+- On retire, pages drop to the LRU cache instead of the free list (if
+  indexed); under pool pressure the scheduler reclaims **unreferenced
+  cached pages first** — LRU eviction — before preempting a live slot.
+- Observability: ``serve_prefix_hits_total`` / ``serve_prefix_miss_total``
+  / ``serve_cow_copies_total`` counters and ``serve_pages_shared`` /
+  ``serve_pages_cached`` gauges export with the usual snapshot; the
+  bench's ``serving_prefix_*`` rows price the win (hot-prefix TTFT,
+  prefill tokens actually fed, resident pages under sharing).
+
+Recurrent state is a function of the *entire* history, not a page's
+worth of it, so stacks with rglru/ssd layers silently serve with the
+cache off — the flag is accepted but inert (pinned by tests).
+
 **Failure semantics** — the resilience layer assumes an adversarial
 world (overload, stragglers, poisoned numerics) and turns every
 degradation into a typed, counted, partial-output-preserving outcome:
@@ -143,8 +187,9 @@ Quickstart::
 
     params = mpx.cast_to_bfloat16(T.init_params(key, cfg))
     engine = serve.ServeEngine(cfg, params, n_slots=4, max_seq=128,
-                               spec_tokens=3,   # n-gram speculative decode
-                               kv_dtype="i8")   # int8 KV pages + scales
+                               spec_tokens=3,    # n-gram speculative decode
+                               kv_dtype="i8",    # int8 KV pages + scales
+                               prefix_cache=True)  # share common prefixes
     for prompt in prompts:
         engine.submit(prompt, max_new=32)
     for result in engine.drain():

@@ -177,6 +177,16 @@ class ServeEngine:
     ``spec_tokens`` sets the speculative window (0 disables);
     ``proposer`` overrides the default n-gram prompt-lookup drafter.
 
+    ``prefix_cache=True`` turns on refcounted prefix-page sharing in the
+    pool (pure-attention stacks; see :mod:`repro.serve.cache`): requests
+    whose prompts begin with resident committed pages admit with those
+    pages mapped shared into their tables and skip the cached prefix in
+    prefill — ``RequestResult.metrics.cached_prefix_tokens`` counts the
+    absorbed work, and ``serve_prefix_hits_total`` /
+    ``serve_prefix_miss_total`` / ``serve_cow_copies_total`` /
+    ``serve_pages_shared`` track the sharing layer.  Greedy output is
+    token-identical with the flag on or off.
+
     Resilience knobs: ``max_queue`` bounds admission (``submit()`` raises
     :class:`EngineOverloaded` instead of queueing unboundedly);
     ``preempt`` enables eviction-and-recompute of the youngest decoding
@@ -201,6 +211,7 @@ class ServeEngine:
                  proposer: Optional[Proposer] = None,
                  use_kernel: bool = False, pages_per_block: int = 1,
                  kv_dtype="bf16", seed: int = 0,
+                 prefix_cache: bool = False,
                  max_queue: Optional[int] = None,
                  preempt: bool = True,
                  faults: Optional[FaultInjector] = None,
@@ -252,6 +263,7 @@ class ServeEngine:
         self.cache = PagedKVCache(cfg, n_slots, max_seq,
                                   page_size=page_size, num_pages=num_pages,
                                   kv_dtype=self.kv_format,
+                                  prefix_cache=prefix_cache,
                                   registry=self.registry)
         self.scheduler = Scheduler(self.cache, chunk_size=chunk_size,
                                    max_batched_tokens=max_batched_tokens,
@@ -424,6 +436,17 @@ class ServeEngine:
         self._sweep_deadlines(results)
         admitted, preempted = self.scheduler.admit()
         self._last_tick_admitted = bool(admitted)
+        if self.cache.prefix_cache and admitted:
+            # a slot admitted mid-feed got its prefix from shared pages:
+            # the skip (slot.fed at admission, before any plan) is the
+            # request's prefill work the cache absorbed
+            admitted_set = set(admitted)
+            for slot in self.scheduler.slots:
+                if (slot is not None
+                        and slot.req.request_id in admitted_set
+                        and slot.fed > 0):
+                    self._inflight[slot.req.request_id] \
+                        .cached_prefix_tokens += slot.fed
         for rid in preempted:
             self._inflight[rid].preemptions += 1
             if tr is not None:
@@ -464,6 +487,10 @@ class ServeEngine:
                 # raised before the device call, while the donated page
                 # buffers are still intact
                 self.faults.maybe_fail_step()
+            # dispatch pending copy-on-write page copies (queued by
+            # admission / note_write) before the step can write into the
+            # copies' target pages — async, no host sync
+            self.cache.flush_cow()
             accept, token, self.cache.pages = self._device_step(
                 self.params, self.cache.pages, self.cache.table_device(),
                 jnp.asarray(plan.tokens), jnp.asarray(plan.start),

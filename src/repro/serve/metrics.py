@@ -48,6 +48,7 @@ class RequestMetrics:
     proposed_tokens: int = 0    # speculative drafts the verifier saw
     accepted_tokens: int = 0    # drafts the verifier accepted
     preemptions: int = 0        # times evicted + recomputed mid-flight
+    cached_prefix_tokens: int = 0  # prefill tokens absorbed by shared pages
     error: Optional[str] = None  # why status == "failed", else None
 
     @property

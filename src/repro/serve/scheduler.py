@@ -8,6 +8,14 @@ Admission is FCFS with full-budget page reservation (see
 slot/pages are re-admitted the same step — the batch never drains to
 refill, which is the whole point of continuous batching.
 
+With the pool's prefix cache enabled, admission hands the candidate
+slot's *feed* (prompt, or prompt + committed output for a recompute) to
+:meth:`PagedKVCache.admit`, which maps any cached-prefix pages into the
+slot's table and returns a committed skip — the slot starts with
+``fed = length = skip`` and chunked prefill feeds only the uncached
+tail.  ``commit()`` registers each slot's newly full committed pages in
+the prefix index as they land (rolling per-page hash, O(new pages)).
+
 Every step is one *mixed* ``(B, chunk_size)`` plan: each active slot
 contributes either its next prefill chunk (a prompt runs through the model
 ``chunk_size`` tokens at a time via the batched ``serve_forward`` entry
@@ -295,16 +303,24 @@ class Scheduler:
                 continue
             req = self.waiting[0]
             total = len(req.prompt) + req.max_new
-            ok = self.cache.admit(slot_id, total)
+            # build the slot first: its feed (prompt, or prompt+committed
+            # output for a recompute) is what the prefix index probes —
+            # a hit maps shared pages into the table and tells us how
+            # many feed tokens to skip (their KV is already resident)
+            cand = _Slot(req, seq=self._admit_seq)
+            ok = self.cache.admit(slot_id, total, feed=cand.feed)
             if not ok and self.preempt and not preempted:
                 victim = self._preempt_victim(total)
                 if victim is not None:
                     preempted.append(self._preempt(victim))
-                    ok = self.cache.admit(slot_id, total)
+                    ok = self.cache.admit(slot_id, total, feed=cand.feed)
             if not ok:
                 break
+            skip = self.cache.slot_length(slot_id)
+            cand.fed = skip
+            cand.length = skip
             self.waiting.popleft()
-            self.slots[slot_id] = _Slot(req, seq=self._admit_seq)
+            self.slots[slot_id] = cand
             self._admit_seq += 1
             admitted.append(req.request_id)
         if self._admissions is not None:
@@ -343,7 +359,13 @@ class Scheduler:
                 best = slot_id
         if best is None:
             return None
-        if need > self.cache.free_pages + self.cache.slot_pages(best):
+        # what the pool could actually produce: free pages, cached pages
+        # (the allocator LRU-evicts unreferenced prefix pages before this
+        # path ever fires), and the victim's exclusively-owned pages —
+        # a page the victim shares with another slot stays referenced
+        # after the eviction and must not be counted toward the shortfall
+        if need > (self.cache.available_pages
+                   + self.cache.reclaimable_pages(best)):
             return None
         return best
 
@@ -518,6 +540,7 @@ class Scheduler:
                 slot.fed += int(plan.valid[slot_id])
                 slot.length = slot.fed
                 self.cache.truncate(slot_id, slot.length)
+                self.cache.note_committed(slot_id, slot.ctx)
                 if not slot.prefilling:
                     if slot.resumed:
                         # recompute prefill of a preempted request: the
@@ -549,6 +572,7 @@ class Scheduler:
                 slot.next_token = new[-1]
                 slot.length += len(new)
                 self.cache.truncate(slot_id, slot.length)
+                self.cache.note_committed(slot_id, slot.ctx)
                 emitted.append((rid, len(new)))
             if slot.done:
                 finished.append((slot_id, self._retire(slot_id)))

@@ -1,0 +1,112 @@
+"""Unit tests for the bench-regression guard
+(``benchmarks/check_regression.py``) and for the committed baseline.
+
+The guard is pure stdlib, so most tests here run on synthetic row lists
+and never touch jax.  The last test cross-checks the committed
+``benchmarks/baseline.json`` against ``expected_row_names()`` so a bench
+schema change that forgets to regenerate the baseline fails in tier-1,
+not just in the CI bench step.
+"""
+import json
+import pathlib
+
+import pytest
+
+from benchmarks.check_regression import (DEFAULT_TOLERANCE, compare, main)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = REPO / "benchmarks" / "baseline.json"
+
+
+def rows(**kv):
+    return [{"name": k, "value": v, "derived": ""} for k, v in kv.items()]
+
+
+def test_identical_rows_pass():
+    r = rows(serving_tok_2slots=3000.0,
+             serving_hbm_bytes_decode_paged=123456.0,
+             serving_prefix_ttft_hot_ratio=0.1)
+    assert compare(r, r) == []
+
+
+def test_missing_row_is_schema_drift():
+    base = rows(serving_tok_2slots=3000.0, serving_prefix_pages_resident=7.0)
+    cur = rows(serving_tok_2slots=3000.0)
+    (err,) = compare(cur, base)
+    assert "schema drift" in err and "serving_prefix_pages_resident" in err
+
+
+def test_extra_row_is_schema_drift():
+    base = rows(serving_tok_2slots=3000.0)
+    cur = rows(serving_tok_2slots=3000.0, serving_new_thing=1.0)
+    (err,) = compare(cur, base)
+    assert "schema drift" in err and "serving_new_thing" in err
+    assert "regenerate" in err
+
+
+def test_bytes_rows_compared_exactly():
+    base = rows(serving_hbm_bytes_decode_paged=1000.0)
+    cur = rows(serving_hbm_bytes_decode_paged=1001.0)
+    (err,) = compare(cur, base)
+    assert "exact match required" in err
+    # even a 0.1% drift in an analytic row is a cost-model change
+    assert compare(base, base) == []
+
+
+def test_wallclock_rows_use_relative_tolerance():
+    base = rows(serving_ttft_2slots=100_000.0)
+    # 10x slower: within the 25x guard band
+    assert compare(rows(serving_ttft_2slots=1_000_000.0), base) == []
+    # 30x slower: catastrophic, fails
+    (err,) = compare(rows(serving_ttft_2slots=3_000_000.0), base)
+    assert "wall-clock" in err
+    # 30x *faster* also fails — that means the row stopped measuring work
+    (err,) = compare(rows(serving_ttft_2slots=3_000.0), base)
+    assert "wall-clock" in err
+
+
+def test_other_rows_are_presence_only():
+    base = rows(serving_prefix_ttft_hot_ratio=0.1, serving_occupancy=0.99)
+    cur = rows(serving_prefix_ttft_hot_ratio=0.9, serving_occupancy=0.01)
+    assert compare(cur, base) == []
+
+
+def test_duplicate_names_rejected():
+    dup = [{"name": "serving_tok_2slots", "value": 1.0},
+           {"name": "serving_tok_2slots", "value": 2.0}]
+    with pytest.raises(ValueError, match="duplicate"):
+        compare(dup, rows(serving_tok_2slots=1.0))
+
+
+def test_tolerance_must_be_a_ratio():
+    r = rows(serving_tok_2slots=1.0)
+    with pytest.raises(ValueError, match="tolerance"):
+        compare(r, r, tolerance=0.5)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = rows(serving_tok_2slots=3000.0,
+                serving_hbm_bytes_decode_paged=1000.0)
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    basef = tmp_path / "baseline.json"
+    basef.write_text(json.dumps(base))
+    good.write_text(json.dumps(base))
+    bad.write_text(json.dumps(
+        rows(serving_tok_2slots=3000.0,
+             serving_hbm_bytes_decode_paged=999.0)))
+    assert main([str(good), str(basef)]) == 0
+    assert "passed" in capsys.readouterr().out
+    assert main([str(bad), str(basef)]) == 1
+    assert "FAILED" in capsys.readouterr().out
+
+
+def test_committed_baseline_matches_bench_schema():
+    serving_bench = pytest.importorskip("benchmarks.serving_bench")
+    baseline = json.loads(BASELINE.read_text())
+    names = [r["name"] for r in baseline]
+    assert names == serving_bench.expected_row_names(), (
+        "benchmarks/baseline.json is stale — regenerate it with "
+        "`python -m benchmarks.serving_bench --json benchmarks/baseline.json`")
+    # and the default tolerance stays a guard band, not a precision claim
+    assert DEFAULT_TOLERANCE >= 10.0

@@ -304,6 +304,42 @@ def test_engine_trace_schema_and_registry_exports(params):
 
 
 @pytest.mark.serve
+def test_prefix_cache_metrics_schema_pinned(params):
+    """Sharing-layer observability: the hit/miss/COW counters and the
+    shared/cached page gauges exist from tick zero (zero-valued series,
+    not absent) and export in both the snapshot and Prometheus text."""
+    engine = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                               page_size=16, chunk_size=16,
+                               prefix_cache=True)
+    # pinned at construction, before any traffic: a dashboard must see
+    # the series immediately, not after the first hit
+    snap = engine.metrics_snapshot()
+    for name in ("serve_prefix_hits_total", "serve_prefix_miss_total",
+                 "serve_cow_copies_total"):
+        assert snap[name] == 0
+    assert snap["serve_pages_shared"] == 0
+    assert snap["serve_pages_cached"] == 0
+    prompt = list(range(1, 33))              # 2 full pages
+    engine.submit(prompt, max_new=4)
+    engine.drain()
+    engine.submit(list(prompt), max_new=4)   # identical: full-page hit
+    engine.drain()
+    snap = engine.metrics_snapshot()
+    assert snap["serve_prefix_hits_total"] == 2
+    assert snap["serve_prefix_miss_total"] >= 1
+    assert snap["serve_cow_copies_total"] == 1    # the boundary COW
+    assert snap["serve_pages_cached"] > 0         # parked after retire
+    prom = engine.prometheus()
+    for name in ("serve_prefix_hits_total", "serve_prefix_miss_total",
+                 "serve_cow_copies_total", "serve_pages_shared",
+                 "serve_pages_cached"):
+        assert name in prom, f"{name} missing from Prometheus export"
+    # the per-request view: cached_prefix_tokens rides RequestMetrics
+    res = engine.drain()
+    assert res[1].metrics.cached_prefix_tokens == len(prompt) - 1
+
+
+@pytest.mark.serve
 def test_engine_step_transfers_exactly_two_arrays(monkeypatch, params):
     """Zero added device syncs: with or without a tracer, one engine step
     crosses device->host exactly twice (the (B,) accept and token arrays

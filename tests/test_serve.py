@@ -81,7 +81,7 @@ def test_paged_cache_invariants_raise_runtime_error():
     cache.check_invariants()
     page = cache._owned[0][0]
     cache._free.append(page)                       # page both owned+free
-    with pytest.raises(RuntimeError, match="owned and free"):
+    with pytest.raises(RuntimeError, match="free and referenced"):
         cache.check_invariants()
     cache._free.remove(page)
     cache._free.pop()                              # leaked page

@@ -431,6 +431,155 @@ def test_random_interleavings_one_result_per_id_invariants_hold(params):
 
 
 # --------------------------------------------------------------------------
+# proposer memo hygiene on abnormal exits (satellite)
+# --------------------------------------------------------------------------
+
+def assert_pool_clean_shared(engine):
+    """Sharing-aware pool check: cached prefix pages legitimately stay
+    resident after drain, but nothing may remain referenced or held."""
+    engine.cache.check_invariants()
+    assert engine.scheduler.busy_slots == 0
+    assert max(engine.cache._refcount, default=0) == 0
+    assert (engine.cache.free_pages + engine.cache.cached_pages
+            == engine.cache.num_pages)
+
+
+def test_proposer_forgets_cancelled_timeout_and_failed_requests(params):
+    """Every terminal path — not just normal completion — must drop the
+    request's NGramProposer suffix-index entry, or a long-running engine
+    leaks host memory under churn."""
+    clock = serve.FakeClock()
+    prop = serve.NGramProposer(max_ngram=2)
+    faults = (serve.FaultInjector(clock=clock)
+              .poison_logits(2, tick=6)
+              .advance_clock(8, 10.0))
+    eng = make_engine(params, n_slots=4, faults=faults, spec_tokens=2,
+                      chunk_size=16, proposer=prop)
+    p = prompts_of(4, seed=8)
+    eng.submit(p[0], max_new=32)                       # cancelled below
+    eng.submit(p[1], max_new=32, deadline_ms=500)      # times out
+    eng.submit(p[2], max_new=32)                       # poisoned -> failed
+    eng.submit(p[3], max_new=4)                        # completes
+    for _ in range(4):
+        eng.step()
+    assert prop._index                   # decoding slots built memo state
+    eng.cancel(0)
+    res = {r.request_id: r for r in eng.drain()}
+    assert res[0].status == "cancelled"
+    assert res[1].status == "timeout"
+    assert res[2].status == "failed"
+    assert res[3].status == "ok"
+    assert prop._index == {}             # no terminal path leaks a memo
+    assert_pool_clean(eng)
+
+
+def test_proposer_forgets_device_step_failure(params):
+    prop = serve.NGramProposer(max_ngram=2)
+    faults = serve.FaultInjector().fail_device_step(3)
+    eng = make_engine(params, faults=faults, spec_tokens=2,
+                      chunk_size=16, proposer=prop)
+    res = drive(eng, prompts_of(2, seed=9), max_new=16)
+    assert all(r.status == "failed" for r in res.values())
+    assert prop._index == {}
+    assert_pool_clean(eng)
+
+
+# --------------------------------------------------------------------------
+# chaos with the prefix cache enabled (satellite)
+# --------------------------------------------------------------------------
+
+def test_pool_exhaustion_window_with_prefix_cache(params):
+    """A scripted hold window with sharing active: refcount/free/held/
+    cached invariants must hold every tick, and the engine recovers."""
+    rng = np.random.default_rng(12)
+    prefix = rng.integers(1, CFG.vocab_size, 16).tolist()
+    faults = serve.FaultInjector().exhaust_pool(1, until_tick=4)
+    eng = make_engine(params, faults=faults, prefix_cache=True)
+    eng.submit(prefix + [5, 6], max_new=4)
+    eng.submit(prefix + [7, 8], max_new=4)
+    while eng.scheduler.has_work:
+        eng.step()
+        eng.cache.check_invariants()
+    res = {r.request_id: r for r in eng.drain()}
+    assert all(r.status == "ok" for r in res.values())
+    kinds = [ev[1] for ev in faults.log]
+    assert "exhaust" in kinds and "release" in kinds
+    assert_pool_clean_shared(eng)
+
+
+def test_preemption_under_sharing_keeps_invariants_every_tick(params):
+    """Pool pressure + shared prefix pages: eviction decrements, never
+    frees a page another slot references — checked at every tick."""
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(1, CFG.vocab_size, 16).tolist()
+    prompts = [prefix + [i + 1] for i in range(3)]
+    ample = make_engine(params, n_slots=3, prefix_cache=True)
+    base = drive(ample, prompts, max_new=8)
+    eng = make_engine(params, n_slots=3, num_pages=8, prefix_cache=True)
+    eng.submit(prompts[0], max_new=8)
+    eng.drain()                                        # warm the prefix
+    for p in prompts[1:]:
+        eng.submit(p, max_new=8)
+    while eng.scheduler.has_work:
+        eng.step()
+        eng.cache.check_invariants()
+    res = {r.request_id: r for r in eng.drain()}
+    assert all(r.status == "ok" for r in res.values())
+    for rid, r in base.items():
+        assert res[rid].tokens == r.tokens, f"rid {rid} diverged"
+    assert_pool_clean_shared(eng)
+
+
+def test_random_interleavings_with_prefix_cache(params):
+    """The property test of the resilience tentpole, rerun with sharing
+    active: one result per id, refcount invariants at every step."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    prefix = [3, 1, 4, 1, 5, 9, 2, 6]        # one page at page_size=8
+
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.data())
+    def run(data):
+        clock = serve.FakeClock()
+        faults = serve.FaultInjector(clock=clock)
+        eng = make_engine(params, num_pages=6, prefix_cache=True,
+                          faults=faults)
+        submitted = []
+        n_ops = data.draw(st.integers(4, 12), label="n_ops")
+        for i in range(n_ops):
+            op = data.draw(st.sampled_from(
+                ["submit", "submit", "step", "step", "cancel",
+                 "advance"]), label=f"op{i}")
+            if op == "submit":
+                tail = data.draw(st.integers(0, 4), label=f"tail{i}")
+                rid = eng.submit(prefix + [10 + i] * tail,
+                                 max_new=data.draw(st.integers(1, 4),
+                                                   label=f"new{i}"),
+                                 deadline_ms=data.draw(
+                                     st.one_of(st.none(), st.just(50.0)),
+                                     label=f"deadline{i}"))
+                submitted.append(rid)
+            elif op == "cancel" and submitted:
+                eng.cancel(data.draw(st.sampled_from(submitted),
+                                     label=f"cancel{i}"))
+            elif op == "advance":
+                clock.advance(data.draw(
+                    st.floats(0.0, 0.04, allow_nan=False),
+                    label=f"dt{i}"))
+            elif op == "step":
+                eng.step()
+                eng.cache.check_invariants()
+        results = eng.drain()
+        assert_pool_clean_shared(eng)
+        assert sorted(r.request_id for r in results) == sorted(submitted)
+
+    run()
+
+
+# --------------------------------------------------------------------------
 # bench schema
 # --------------------------------------------------------------------------
 
