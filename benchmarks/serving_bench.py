@@ -48,6 +48,14 @@ drive: prefill chunks, decode windows with draft/accept counts,
 truncates, retires) and the Prometheus text snapshot of the engine's
 registries — CI archives both next to the JSON rows.
 
+The ``serving_journal_overhead_pct`` row prices the flight recorder the
+same way (journal off vs a live :class:`repro.obs.JournalRecorder`,
+interleaved best-of-N, budget <3%), and ``--journal`` records the
+scripted chaos drive's journal — CI replays it with ``python -m
+repro.obs.journal`` (token-identical re-drive or the first divergent
+tick) and renders the postmortem with ``python -m
+repro.obs.postmortem``, archiving both.
+
 The ``serving_tok_arch_{attn,ssm,rglru,hybrid}`` rows drive one config
 per layer-kind family through the same engine — the per-layer-kind state
 pool serves attention (paged KV), pure SSD and pure RG-LRU (O(1)
@@ -144,7 +152,7 @@ def expected_row_names() -> list:
     names += [f"serving_hbm_bytes_decode_kv{label}" for label, _ in KV_CELL]
     names += ["serving_tok_spec_base", "serving_tok_spec_spec",
               "serving_spec_accept_rate", "serving_spec_tokens_per_step"]
-    names += ["serving_obs_overhead_pct"]
+    names += ["serving_obs_overhead_pct", "serving_journal_overhead_pct"]
     names += [f"serving_tok_arch_{label}" for label, _ in _arch_cell_cfgs()]
     names += ["serving_preempt_recompute_overhead_pct",
               "serving_resilience_statuses"]
@@ -267,14 +275,14 @@ def _drive(engine, prompts, max_new):
     return engine.stats.summary()
 
 
-def run(trace_path=None, metrics_path=None,
-        fault_trace_path=None) -> list[tuple[str, float, str]]:
+def run(trace_path=None, metrics_path=None, fault_trace_path=None,
+        journal_path=None) -> list[tuple[str, float, str]]:
     import jax
     import jax.numpy as jnp
 
     from repro import mpx, serve
     from repro.models import transformer as T
-    from repro.obs import Tracer
+    from repro.obs import JournalRecorder, Tracer
 
     cfg = _bench_cfg()
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
@@ -410,6 +418,36 @@ def run(trace_path=None, metrics_path=None,
         "serving_obs_overhead_pct", overhead_pct,
         f"tok_s off={tok['off']:.0f} on={tok['on']:.0f} (budget <3%)"))
 
+    # -- flight-recorder overhead: identical workload, journal off vs on ----
+    # the recorder appends one JSONL line per tick/submit/result from
+    # host-side ints only (the token-chain hash reuses the two arrays the
+    # verifier already transferred — zero added syncs, pinned by the same
+    # transfer-count test as the tracer).  Same interleaved best-of-N
+    # treatment as the obs cell.
+    import os
+    import tempfile
+    tok = {"off": 0.0, "on": 0.0}
+    for rep in range(3):
+        for label in ("off", "on") if rep % 2 == 0 else ("on", "off"):
+            journal = None
+            jpath = None
+            if label == "on":
+                fd, jpath = tempfile.mkstemp(suffix=".jsonl")
+                os.close(fd)
+                journal = JournalRecorder(jpath, param_seed=0)
+            engine = serve.ServeEngine(
+                cfg, params, n_slots=CMP_SLOTS, max_seq=CMP_MAX_SEQ,
+                page_size=CMP_PAGE, chunk_size=16, journal=journal)
+            s = _drive(engine, cmp_prompts, CMP_MAX_NEW)
+            if journal is not None:
+                journal.close()
+                os.unlink(jpath)
+            tok[label] = max(tok[label], s["tok_per_s"])
+    overhead_pct = 100.0 * (tok["off"] - tok["on"]) / max(tok["off"], 1e-9)
+    rows.append((
+        "serving_journal_overhead_pct", overhead_pct,
+        f"tok_s off={tok['off']:.0f} on={tok['on']:.0f} (budget <3%)"))
+
     # -- per-architecture throughput: one state-pool engine, every family ---
     # attention reserves KV pages; ssm/rglru slots carry O(1) recurrent
     # state with zero pages; the hybrid stack uses both at once.  Greedy
@@ -469,9 +507,16 @@ def run(trace_path=None, metrics_path=None,
               .poison_logits(1, tick=2)
               .advance_clock(3, 10.0))
     ftracer = Tracer(process_name="repro.serve.chaos")
+    # with --journal the chaos drive doubles as the CI replay fixture:
+    # the journal records this exact drive (faults, clock jumps, cancel)
+    # and `python -m repro.obs.journal <path>` re-drives it token-
+    # identically (params rebuilt from param_seed=0, same as above)
+    fjournal = (JournalRecorder(journal_path, param_seed=0)
+                if journal_path else None)
     engine = serve.ServeEngine(cfg, params, n_slots=2, max_seq=64,
                                page_size=16, chunk_size=16,
-                               faults=faults, tracer=ftracer)
+                               faults=faults, tracer=ftracer,
+                               journal=fjournal)
     rid_ok = engine.submit(pre_prompts[0], max_new=8)
     engine.submit(pre_prompts[1], max_new=8, request_id=1)  # poisoned
     rid_dl = engine.submit(pre_prompts[2], max_new=8, deadline_ms=500)
@@ -491,6 +536,8 @@ def run(trace_path=None, metrics_path=None,
         " ".join(f"{k}={v}" for k, v in sorted(counts.items()))))
     if fault_trace_path:
         ftracer.export(fault_trace_path)
+    if fjournal is not None:
+        fjournal.close()
 
     # -- prefix caching: repeated-prefix workload ---------------------------
     # a hot 112-token (7-page) system prompt shared by every request,
@@ -582,9 +629,15 @@ def main() -> None:
     ap.add_argument("--fault-trace", type=str, default=None,
                     help="export a Chrome trace of the scripted chaos "
                          "drive (poison/deadline/cancel) to this path")
+    ap.add_argument("--journal", type=str, default=None,
+                    help="record the chaos drive's flight-recorder journal "
+                         "to this path (replay with `python -m "
+                         "repro.obs.journal <path>`, analyze with "
+                         "`python -m repro.obs.postmortem <path>`)")
     args = ap.parse_args()
     rows = run(trace_path=args.trace, metrics_path=args.metrics_out,
-               fault_trace_path=args.fault_trace)
+               fault_trace_path=args.fault_trace,
+               journal_path=args.journal)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -11,7 +11,13 @@ controller overflows, halves, and settles — every transition lands in a
 count, halving/doubling events) printed and JSON-exported at the end.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+``--metrics-out precision.prom`` additionally exports the PrecisionStats
+registry as Prometheus text — the file ``python -m repro.obs.postmortem
+--precision`` joins into a serve incident report (the loss-scale
+trajectory behind a nonfinite event).
 """
+import argparse
 import json
 
 import jax
@@ -45,7 +51,13 @@ def loss_fn(model, batch):
     return mpx.force_full_precision(jnp.mean)((pred - batch["y"]) ** 2)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the PrecisionStats registry as Prometheus "
+                         "text to this path (joinable via `python -m "
+                         "repro.obs.postmortem --precision`)")
+    args = ap.parse_args(argv)
     # fp16 like the paper's GPUs; dynamic loss scaling is then load-bearing
     mpx.set_half_dtype(jnp.float16)
     key = jax.random.key(0)
@@ -88,6 +100,10 @@ def main():
           f"{precision.scale_halvings} halvings, "
           f"{precision.scale_doublings} doublings "
           f"(trajectory + counters -> quickstart_precision.json)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(precision.registry.prometheus())
+        print(f"precision registry (Prometheus text) -> {args.metrics_out}")
     print("done — mixed-precision fp16 training with dynamic loss scaling")
 
 

@@ -117,7 +117,15 @@ submit/admit instants, prefill chunk spans, decode window spans carrying
 draft/accept counts, truncate markers on rejected speculative tails, and
 retire — as a per-slot timeline.  The instrumentation reads host state
 only; tracing adds zero device syncs and <3% tok/s (the bench's
-``serving_obs_overhead_pct`` row prices it).
+``serving_obs_overhead_pct`` row prices it).  ``--journal out.jsonl``
+additionally attaches the flight recorder: every external input to the
+drive (config fingerprint, fault schedule, clock samples, submits,
+cancels) plus a per-tick digest lands in an append-only JSONL journal
+that ``python -m repro.obs.journal out.jsonl`` replays deterministically
+(token-identical, or the first divergent tick named) and ``python -m
+repro.obs.postmortem out.jsonl`` renders as a per-request incident
+report — ``--chaos --journal`` records a poisoned, pool-starved drive
+you can replay and dissect offline.
 
 **Failure semantics** (the resilience layer): every request ends with
 exactly one result whose ``status`` is ``ok`` / ``cancelled`` /
@@ -154,7 +162,7 @@ from repro import mpx, serve
 from repro.configs import registry
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.obs import Tracer
+from repro.obs import JournalRecorder, Tracer
 
 SERVE_MODEL = ModelConfig(
     name="serve-20m", family="dense",
@@ -233,6 +241,12 @@ def main():
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the engine's metrics registries to this "
                          "path as Prometheus text")
+    ap.add_argument("--journal", type=str, default=None,
+                    help="record the drive's flight-recorder journal "
+                         "(JSONL) to this path; replay it later with "
+                         "`python -m repro.obs.journal <path>` and render "
+                         "the incident report with `python -m "
+                         "repro.obs.postmortem <path>`")
     args = ap.parse_args()
 
     if args.config == "serve-20m":
@@ -244,6 +258,10 @@ def main():
                      f"no decode path to serve")
     params = mpx.cast_to_bfloat16(T.init_params(jax.random.key(0), cfg))
     tracer = Tracer(process_name="repro.serve") if args.trace else None
+    # param_seed=0 matches the init above, so the journal is
+    # self-contained: replay rebuilds the weights from the header alone
+    journal = (JournalRecorder(args.journal, param_seed=0)
+               if args.journal else None)
     faults = None
     if args.chaos:
         faults = (serve.FaultInjector()
@@ -260,7 +278,7 @@ def main():
         max_queue=args.max_queue,
         sampling=serve.SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p),
-        tracer=tracer, faults=faults)
+        tracer=tracer, faults=faults, journal=journal)
 
     rng = np.random.default_rng(0)
     # with --prefix-cache, give every request a shared "system prompt"
@@ -335,6 +353,11 @@ def main():
         with open(args.metrics_out, "w") as f:
             f.write(engine.prometheus())
         print(f"metrics: Prometheus snapshot -> {args.metrics_out}")
+    if journal is not None:
+        journal.close()
+        print(f"journal: flight recorder -> {args.journal} "
+              f"(replay: python -m repro.obs.journal {args.journal}; "
+              f"report: python -m repro.obs.postmortem {args.journal})")
 
 
 if __name__ == "__main__":

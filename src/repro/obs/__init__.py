@@ -1,7 +1,7 @@
-"""repro.obs — unified telemetry: metrics registry, request tracing, and
-precision observability.
+"""repro.obs — unified telemetry: metrics registry, request tracing,
+precision observability, and the serving flight recorder.
 
-Three dependency-free layers instrumenting both halves of the stack:
+Four dependency-free layers instrumenting both halves of the stack:
 
 - :mod:`~repro.obs.registry` — labeled counters / gauges /
   log2-bucketed histograms with ``snapshot()`` dicts, Prometheus text
@@ -22,12 +22,26 @@ Three dependency-free layers instrumenting both halves of the stack:
   :func:`~repro.obs.precision.per_layer_grad_summary`, per-layer grad
   amax / nonfinite / underflow fractions computed *inside* the jitted
   train step as fixed-shape arrays — no host callbacks.
+- :mod:`~repro.obs.journal` — the **flight recorder**:
+  :class:`JournalRecorder` event-sources every external input to a
+  ``ServeEngine`` drive (config fingerprint, fault schedule, clock
+  samples, submits/cancels, per-tick digests with a rolling token hash)
+  into bounded append-only JSONL; :func:`replay_journal` reconstructs
+  the engine and re-drives it deterministically, naming the first
+  divergent tick on mismatch.  :mod:`~repro.obs.postmortem` joins the
+  journal with the other three layers' artifacts into a per-request
+  incident report (``python -m repro.obs.postmortem``).
 
 Everything here is host-side bookkeeping recorded around the jitted
-steps; tracing a serve session adds zero device syncs to
+steps; tracing or journaling a serve session adds zero device syncs to
 ``ServeEngine.step()`` (pinned by tests) and <3% tok/s on the bench
-workload (the ``serving_obs_overhead_pct`` CI row).
+workload (the ``serving_obs_overhead_pct`` and
+``serving_journal_overhead_pct`` CI rows).
 """
+from repro.obs.journal import (JournalDivergence, JournalError,
+                               JournalMismatch, JournalRecorder,
+                               JournalTruncated, ReplayReport,
+                               read_journal, replay_journal)
 from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
                                 merged_prometheus, merged_snapshot)
 from repro.obs.trace import Tracer, profiler_trace, validate_chrome_trace
@@ -36,14 +50,22 @@ __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "JournalDivergence",
+    "JournalError",
+    "JournalMismatch",
+    "JournalRecorder",
+    "JournalTruncated",
     "PrecisionStats",
     "Registry",
+    "ReplayReport",
     "Tracer",
     "grad_layer_names",
     "merged_prometheus",
     "merged_snapshot",
     "per_layer_grad_summary",
     "profiler_trace",
+    "read_journal",
+    "replay_journal",
     "validate_chrome_trace",
 ]
 

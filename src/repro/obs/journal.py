@@ -1,0 +1,580 @@
+"""Flight recorder: event-sourced ServeEngine journal + deterministic replay.
+
+Turns "a request timed out in CI at 02:00" into a checked-in repro
+artifact: a :class:`JournalRecorder` attached via
+``ServeEngine(journal=...)`` event-sources **every external input** to a
+serve drive, and :func:`replay_journal` reconstructs the engine from the
+journal alone and re-drives it, asserting token identity and per-tick
+digest equality — the serving analogue of MPX §3.3's discipline of making
+invisible events (overflow → halve → recover) first-class inspectable
+records instead of silent retries.
+
+Journal schema (versioned, append-only JSONL — one JSON object per line)::
+
+    {"ev":"header","schema":1,"config":{...},"engine":{...},
+     "faults":{...}|null,"param_seed":N|null}
+    {"ev":"clocks","v":[t0,t1,...]}          # batched clock samples
+    {"ev":"submit","rid":R,"prompt":[...],"max_new":N,"deadline_ms":D}
+    {"ev":"cancel","rid":R}
+    {"ev":"tick","i":N,"d":{...}}            # per-tick digest (below)
+    {"ev":"result","rid":R,"status":S,"tokens":[...],"m":{...}}
+    {"ev":"truncated"}                       # max_events bound was hit
+
+The header carries the **config fingerprint**: the full
+:class:`~repro.configs.base.ModelConfig`, every engine constructor knob
+(slots, pool geometry, chunking, kv format, sampling, seeds, admission
+and preemption policy), and the :class:`~repro.serve.faults.FaultInjector`
+schedule captured *before* any tick fires.  ``clocks`` records every
+sample the engine drew from its clock, in order — deadlines, metrics and
+admission estimates are all functions of these samples, so replay feeds
+them back verbatim instead of re-reading a wall clock.
+
+The per-tick digest ``d`` is built from host-side plan state the engine
+already holds (recording adds **zero device syncs**; the
+two-transfers-per-step pin in tests/test_obs.py holds with the journal
+enabled): plan kind and token/draft counts, admitted/preempted request
+ids, this tick's accepted-token count, finished ``[rid, status]`` pairs,
+a pool digest ``[free, used, cached, shared, held]`` pages, cumulative
+prefix/COW counters, and ``tok`` — a rolling blake2b chain over each
+valid slot's ``(slot, rid, token, accept)`` — so a single flipped sampled
+token at tick N changes every digest from N on.
+
+Replay guarantees and limits:
+
+- :func:`replay_journal` rebuilds the engine **from the header** (params
+  re-initialized from ``param_seed``, or passed in), re-drives the
+  recorded submit/cancel/step sequence, and compares digests tick by
+  tick; the first mismatch raises :class:`JournalDivergence` naming the
+  **first divergent tick** with both digests.
+- Replay requires the same config fingerprint: the replayed engine's
+  fingerprint is checked against the header at attach time
+  (:class:`JournalMismatch` on drift), so a journal cannot silently
+  replay against different weights geometry, pool sizing or policy.
+- Custom :class:`~repro.serve.propose.Proposer` instances cannot be
+  serialized — a journal recorded with one replays only when an
+  equivalent instance is passed to ``replay_journal(..., proposer=...)``.
+- Determinism holds per backend: a journal recorded on CPU replays
+  token-identically on CPU (CI records and replays in one job); across
+  backends the digests are still the ground truth for triage.
+- A journal that hit its ``max_events`` bound is marked ``truncated``
+  and refuses to replay (the input stream is incomplete) — the bound
+  exists so a runaway session cannot fill the disk.
+
+CLI::
+
+    python -m repro.obs.journal <journal.jsonl>    # replay; exit 1 on
+                                                   # divergence
+
+``python -m repro.obs.postmortem`` renders the same journal as a
+per-request incident report (see :mod:`repro.obs.postmortem`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 1
+
+#: seed of the rolling token-hash chain (versioned with the schema)
+_TOK_SEED = b"repro.journal.v1"
+
+
+class JournalError(RuntimeError):
+    """Base class for journal recording/replay failures."""
+
+
+class JournalMismatch(JournalError):
+    """The replayed engine's config fingerprint differs from the header —
+    replay requires the same config fingerprint."""
+
+
+class JournalTruncated(JournalError):
+    """The recording hit its ``max_events`` bound: the input event stream
+    is incomplete, so the drive cannot be reconstructed."""
+
+
+class JournalDivergence(JournalError):
+    """Replay produced a different per-tick digest than the journal
+    recorded.  Carries the first divergent tick and both digests."""
+
+    def __init__(self, tick: int, recorded: dict, replayed: dict):
+        self.tick = tick
+        self.recorded = recorded
+        self.replayed = replayed
+        super().__init__(
+            f"replay diverged at tick {tick}:\n"
+            f"  recorded: {json.dumps(recorded, sort_keys=True)}\n"
+            f"  replayed: {json.dumps(replayed, sort_keys=True)}")
+
+
+def _chain(prev: bytes, tok_items: Sequence[Tuple[int, int, int, int]]
+           ) -> bytes:
+    """Advance the rolling token hash over one tick's (slot, rid, token,
+    accept) tuples."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    for slot, rid, token, accept in tok_items:
+        h.update(f"{slot}:{rid}:{token}:{accept};".encode())
+    return h.digest()
+
+
+def _normalize(obj):
+    """JSON round-trip: tuples become lists, keys become strings — so a
+    freshly built digest compares equal to one read back from disk."""
+    return json.loads(json.dumps(obj))
+
+
+class _JournalHook:
+    """Shared recorder/replayer state: tick numbering + the rolling
+    token-hash chain (both sides must compute it identically)."""
+
+    def __init__(self):
+        self._tok = _TOK_SEED
+        self._n_ticks = 0
+
+    def _tick_digest(self, digest: dict, tok_items) -> dict:
+        self._tok = _chain(self._tok, tok_items)
+        d = dict(digest)
+        d["tok"] = self._tok.hex()
+        return d
+
+
+class JournalRecorder(_JournalHook):
+    """Append-only JSONL flight recorder for one ``ServeEngine`` drive.
+
+    Attach at construction — ``ServeEngine(cfg, params, journal=rec)`` —
+    and the engine records its config fingerprint, fault schedule, every
+    clock sample, ``submit``/``cancel`` call, per-tick digest, and
+    per-request result.  ``param_seed`` (optional) makes the journal
+    self-contained: :func:`replay_journal` re-initializes params from it
+    (``init_params(key(param_seed), cfg)`` cast to bf16 — the convention
+    every bench/test drive uses); without it, replay needs ``params=``.
+
+    Writes are flushed per event, so a crashed drive still leaves a
+    usable journal (that is the point of a flight recorder).  The file is
+    bounded by ``max_events``: past the bound the journal is marked
+    truncated and further events are dropped — a truncated journal
+    refuses to replay but still feeds the postmortem analyzer.
+    """
+
+    def __init__(self, path, *, param_seed: Optional[int] = None,
+                 max_events: int = 1_000_000):
+        super().__init__()
+        if max_events < 1:
+            raise ValueError(f"max_events must be >= 1: {max_events}")
+        self.path = str(path)
+        self.param_seed = param_seed
+        self.max_events = int(max_events)
+        self._f = open(self.path, "w")
+        self._clock_buf: List[float] = []
+        self._n_events = 0
+        self.truncated = False
+        self.attached = False
+
+    # -- engine-facing hooks (duck-typed: the engine never imports us) ------
+
+    def wrap_clock(self, inner: Callable[[], float]) -> Callable[[], float]:
+        def clock() -> float:
+            v = inner()
+            if not self.truncated:
+                self._clock_buf.append(v)
+            return v
+        return clock
+
+    def on_attach(self, fingerprint: dict, faults) -> None:
+        if self.attached:
+            raise JournalError(
+                "a JournalRecorder records exactly one engine drive — "
+                "attach a fresh recorder per ServeEngine")
+        self.attached = True
+        header = {"ev": "header", "schema": SCHEMA_VERSION,
+                  "param_seed": self.param_seed,
+                  "faults": (faults.schedule() if faults is not None
+                             else None)}
+        header.update(fingerprint)          # "config" + "engine"
+        self._write(header, count=False)
+        self._f.flush()
+
+    def record_submit(self, rid: int, prompt: Sequence[int], max_new: int,
+                      deadline_ms: Optional[float]) -> None:
+        self._flush_clocks()
+        self._write({"ev": "submit", "rid": rid, "prompt": list(prompt),
+                     "max_new": max_new, "deadline_ms": deadline_ms})
+        self._f.flush()
+
+    def record_cancel(self, rid: int) -> None:
+        self._flush_clocks()
+        self._write({"ev": "cancel", "rid": rid})
+        self._f.flush()
+
+    def record_tick(self, digest: dict, tok_items) -> None:
+        d = self._tick_digest(digest, tok_items)
+        i = self._n_ticks
+        self._n_ticks += 1
+        self._flush_clocks()
+        self._write({"ev": "tick", "i": i, "d": d})
+        self._f.flush()
+
+    def record_result(self, result) -> None:
+        rm = result.metrics
+        self._flush_clocks()
+        self._write({"ev": "result", "rid": result.request_id,
+                     "status": result.status,
+                     "tokens": list(result.tokens),
+                     "m": {"prompt_len": rm.prompt_len,
+                           "ttft": rm.ttft,
+                           "queue_wait": rm.queue_wait,
+                           "prefill_s": rm.prefill_seconds,
+                           "decode_s": rm.decode_seconds,
+                           "preempted_s": rm.preempted_seconds,
+                           "preemptions": rm.preemptions,
+                           "cached_prefix": rm.cached_prefix_tokens,
+                           "proposed": rm.proposed_tokens,
+                           "accepted": rm.accepted_tokens,
+                           "error": rm.error}})
+        self._f.flush()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._flush_clocks()
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self) -> "JournalRecorder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- internals ----------------------------------------------------------
+
+    def _flush_clocks(self) -> None:
+        if self._clock_buf and not self.truncated:
+            buf, self._clock_buf = self._clock_buf, []
+            self._write({"ev": "clocks", "v": buf})
+
+    def _write(self, obj: dict, count: bool = True) -> None:
+        if self.truncated:
+            return
+        if count:
+            self._n_events += 1
+            if self._n_events > self.max_events:
+                self.truncated = True
+                self._f.write(json.dumps({"ev": "truncated"}) + "\n")
+                self._f.flush()
+                return
+        self._f.write(json.dumps(obj) + "\n")
+
+
+def read_journal(path) -> Tuple[dict, List[dict]]:
+    """Parse a journal file into ``(header, events)``.
+
+    Raises :class:`JournalError` with the offending line number on
+    malformed input, a missing header, or a schema-version mismatch.
+    """
+    header: Optional[dict] = None
+    events: List[dict] = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as err:
+                raise JournalError(
+                    f"{path}:{lineno}: not valid JSON ({err}) — the "
+                    f"journal is corrupt or not a journal at all")
+            if not isinstance(obj, dict) or "ev" not in obj:
+                raise JournalError(
+                    f"{path}:{lineno}: journal records are objects with "
+                    f"an 'ev' field, got {obj!r}")
+            if obj["ev"] == "header":
+                if header is not None:
+                    raise JournalError(
+                        f"{path}:{lineno}: second header record — one "
+                        f"journal holds exactly one engine drive")
+                header = obj
+            else:
+                events.append(obj)
+    if header is None:
+        raise JournalError(
+            f"{path}: no header record — not a flight-recorder journal")
+    if header.get("schema") != SCHEMA_VERSION:
+        raise JournalError(
+            f"{path}: journal schema v{header.get('schema')!r}, this "
+            f"build reads v{SCHEMA_VERSION} — replay with a matching "
+            f"checkout")
+    return header, events
+
+
+def _config_from_dict(d: dict):
+    """Rebuild a ModelConfig from its JSON form (lists -> tuples)."""
+    from repro.configs.base import ModelConfig
+    kw = {}
+    for k, v in d.items():
+        if isinstance(v, list):
+            v = tuple(tuple(x) if isinstance(x, list) else x for x in v)
+        kw[k] = v
+    return ModelConfig(**kw)
+
+
+def _diff_paths(recorded, live, prefix: str = "") -> List[str]:
+    out: List[str] = []
+    if isinstance(recorded, dict) and isinstance(live, dict):
+        for k in sorted(set(recorded) | set(live)):
+            p = f"{prefix}.{k}" if prefix else str(k)
+            out += _diff_paths(recorded.get(k), live.get(k), p)
+    elif recorded != live:
+        out.append(f"{prefix}: recorded {recorded!r} vs engine {live!r}")
+    return out
+
+
+class _Replayer(_JournalHook):
+    """The replay-side journal hook: feeds recorded clock samples back to
+    the engine and compares each per-tick digest against the recording,
+    raising :class:`JournalDivergence` at the first mismatch."""
+
+    def __init__(self, header: dict, events: List[dict]):
+        super().__init__()
+        self.header = header
+        self._samples: deque = deque()
+        for ev in events:
+            if ev["ev"] == "clocks":
+                self._samples.extend(ev["v"])
+        self.ticks = [ev for ev in events if ev["ev"] == "tick"]
+        # results written after the final tick belong to a tick that
+        # aborted mid-flight (a real, non-injected exception): the tick
+        # itself was never journaled, so replay cannot re-create them —
+        # keep them out of the coverage check
+        last_tick = max((i for i, ev in enumerate(events)
+                         if ev["ev"] == "tick"), default=-1)
+        self.results = {ev["rid"]: ev for i, ev in enumerate(events)
+                        if ev["ev"] == "result" and i < last_tick}
+        self.aborted_results = [ev for i, ev in enumerate(events)
+                                if ev["ev"] == "result" and i > last_tick]
+        self._last_sample = 0.0
+        self._seen_rids: set = set()
+        self._i = 0
+        self.ticks_compared = 0
+        self.result_mismatches: List[dict] = []
+        self.clock_exhausted = False
+
+    # -- engine-facing hooks ------------------------------------------------
+
+    def wrap_clock(self, inner: Callable[[], float]) -> Callable[[], float]:
+        def clock() -> float:
+            if self._samples:
+                self._last_sample = self._samples.popleft()
+            else:
+                # more clock reads than recorded: control flow already
+                # diverged — keep time frozen so the digest comparison
+                # (not an IndexError) names the divergent tick
+                self.clock_exhausted = True
+            return self._last_sample
+        return clock
+
+    def on_attach(self, fingerprint: dict, faults) -> None:
+        recorded = _normalize({"config": self.header["config"],
+                               "engine": self.header["engine"]})
+        live = _normalize(fingerprint)
+        if recorded != live:
+            diffs = _diff_paths(recorded, live)
+            raise JournalMismatch(
+                "replay requires the same config fingerprint the journal "
+                "was recorded with; the replayed engine differs at:\n  "
+                + "\n  ".join(diffs))
+
+    def record_submit(self, rid, prompt, max_new, deadline_ms) -> None:
+        pass
+
+    def record_cancel(self, rid) -> None:
+        pass
+
+    def record_tick(self, digest: dict, tok_items) -> None:
+        d = _normalize(self._tick_digest(digest, tok_items))
+        i = self._i
+        self._i += 1
+        if i >= len(self.ticks):
+            raise JournalDivergence(
+                i, {"missing": "journal recorded no tick at this index"},
+                d)
+        rec = _normalize(self.ticks[i]["d"])
+        if rec != d:
+            raise JournalDivergence(i, rec, d)
+        self.ticks_compared += 1
+
+    def record_result(self, result) -> None:
+        rid = result.request_id
+        self._seen_rids.add(rid)
+        rec = self.results.get(rid)
+        if rec is None:
+            self.result_mismatches.append(
+                {"rid": rid, "recorded": None,
+                 "replayed": {"status": result.status,
+                              "tokens": list(result.tokens)}})
+            return
+        if (rec["status"] != result.status
+                or list(rec["tokens"]) != list(result.tokens)):
+            self.result_mismatches.append(
+                {"rid": rid,
+                 "recorded": {"status": rec["status"],
+                              "tokens": rec["tokens"]},
+                 "replayed": {"status": result.status,
+                              "tokens": list(result.tokens)}})
+
+    def finish(self) -> None:
+        """Flag recorded results the replay never produced."""
+        for rid in sorted(set(self.results) - self._seen_rids):
+            rec = self.results[rid]
+            self.result_mismatches.append(
+                {"rid": rid,
+                 "recorded": {"status": rec["status"],
+                              "tokens": rec["tokens"]},
+                 "replayed": None})
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    """Outcome of :func:`replay_journal`."""
+    ok: bool
+    ticks: int                       # ticks replayed with equal digests
+    results: int                     # recorded results checked
+    divergence: Optional[JournalDivergence] = None
+    result_mismatches: List[dict] = dataclasses.field(default_factory=list)
+    aborted_results: int = 0         # results of a tick that never journaled
+    clock_exhausted: bool = False
+
+    def summary(self) -> str:
+        if self.ok:
+            extra = (f" ({self.aborted_results} result(s) from an aborted "
+                     f"final tick skipped)" if self.aborted_results else "")
+            return (f"replay OK: {self.ticks} ticks digest-identical, "
+                    f"{self.results} request results token-identical"
+                    f"{extra}")
+        lines = [f"replay FAILED after {self.ticks} matching ticks"]
+        if self.divergence is not None:
+            lines.append(str(self.divergence))
+        for mm in self.result_mismatches:
+            lines.append(f"  result mismatch rid={mm['rid']}: "
+                         f"recorded={mm['recorded']} "
+                         f"replayed={mm['replayed']}")
+        return "\n".join(lines)
+
+
+def replay_journal(path, params=None, proposer=None,
+                   raise_on_divergence: bool = True) -> ReplayReport:
+    """Reconstruct the engine from a journal and re-drive it.
+
+    Rebuilds the :class:`~repro.configs.base.ModelConfig`, engine knobs,
+    sampling params and :class:`~repro.serve.faults.FaultInjector`
+    schedule from the header; initializes params from the recorded
+    ``param_seed`` (or uses ``params``); drives the engine's clock from
+    the recorded samples; then replays the recorded submit/cancel/step
+    sequence, comparing every per-tick digest and every request result.
+
+    Returns a :class:`ReplayReport`.  With ``raise_on_divergence`` (the
+    default) a digest mismatch raises :class:`JournalDivergence` naming
+    the first divergent tick with both digests, and result mismatches
+    raise :class:`JournalError`.
+    """
+    header, events = read_journal(path)
+    if any(ev["ev"] == "truncated" for ev in events):
+        raise JournalTruncated(
+            f"{path}: the recording hit its max_events bound mid-drive, "
+            f"so the input event stream is incomplete and the drive "
+            f"cannot be reconstructed — re-record with "
+            f"JournalRecorder(max_events=...) sized for the drive (the "
+            f"postmortem analyzer still reads the truncated journal)")
+
+    # replay needs the engine (and thus jax); keep `import
+    # repro.obs.journal` stdlib-only for recording-side consumers
+    import jax
+
+    from repro import mpx
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector
+    from repro.serve.sampling import SamplingParams
+
+    cfg = _config_from_dict(header["config"])
+    if params is None:
+        seed = header.get("param_seed")
+        if seed is None:
+            raise JournalError(
+                f"{path}: the journal carries no param_seed and no "
+                f"params were passed — record with JournalRecorder(path, "
+                f"param_seed=...) for a self-contained journal, or call "
+                f"replay_journal(path, params=...)")
+        params = mpx.cast_to_bfloat16(
+            T.init_params(jax.random.key(int(seed)), cfg))
+
+    ekw = dict(header["engine"])
+    sampling = SamplingParams(**ekw.pop("sampling"))
+    prop_name = ekw.pop("proposer")
+    if proposer is None and prop_name not in (None, "NGramProposer"):
+        raise JournalError(
+            f"{path}: recorded with a custom proposer {prop_name!r}, "
+            f"which cannot be serialized — pass an equivalent instance "
+            f"via replay_journal(..., proposer=...)")
+    fault_sched = header.get("faults")
+    faults = (FaultInjector.from_schedule(fault_sched)
+              if fault_sched else None)
+
+    rep = _Replayer(header, events)
+    engine = ServeEngine(cfg, params, sampling=sampling, proposer=proposer,
+                         faults=faults, journal=rep, **ekw)
+    divergence: Optional[JournalDivergence] = None
+    try:
+        for ev in events:
+            kind = ev["ev"]
+            if kind == "submit":
+                engine.submit(ev["prompt"], max_new=ev["max_new"],
+                              request_id=ev["rid"],
+                              deadline_ms=ev["deadline_ms"])
+            elif kind == "cancel":
+                engine.cancel(ev["rid"])
+            elif kind == "tick":
+                engine.step()
+    except JournalDivergence as err:
+        divergence = err
+    if divergence is None:
+        rep.finish()
+    report = ReplayReport(
+        ok=divergence is None and not rep.result_mismatches,
+        ticks=rep.ticks_compared, results=len(rep.results),
+        divergence=divergence, result_mismatches=rep.result_mismatches,
+        aborted_results=len(rep.aborted_results),
+        clock_exhausted=rep.clock_exhausted)
+    if raise_on_divergence and divergence is not None:
+        raise divergence
+    if raise_on_divergence and report.result_mismatches:
+        raise JournalError(report.summary())
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.journal",
+        description="Replay a ServeEngine flight-recorder journal and "
+                    "verify token identity + per-tick digest equality.")
+    ap.add_argument("journal", help="journal JSONL recorded via "
+                                    "ServeEngine(journal=JournalRecorder(...))")
+    args = ap.parse_args(argv)
+    try:
+        report = replay_journal(args.journal, raise_on_divergence=False)
+    except JournalError as err:
+        print(f"replay error: {err}")
+        return 2
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,381 @@
+"""Postmortem analyzer: join a flight-recorder journal with the Chrome
+trace, Prometheus snapshot and precision telemetry into an incident
+report.
+
+The journal (:mod:`repro.obs.journal`) is the event-sourced ground truth
+of one ``ServeEngine`` drive; the other observability artifacts each see
+a different projection of the same drive (spans, counters, loss-scale
+trajectory).  ``analyze()`` reassembles them into a **per-request causal
+story**: where each request's latency went (queue wait vs prefill vs
+decode vs preempted-recompute), what happened to it (preemptions, COW
+copies, prefix hits, speculative accept rate, deadline/cancel/nonfinite
+outcome), and — when a training-side
+:class:`~repro.obs.precision.PrecisionStats` export is supplied — the
+loss-scale trajectory behind any nonfinite event.
+
+CLI::
+
+    python -m repro.obs.postmortem <journal.jsonl> \
+        [--trace serving_trace.json] [--metrics serving_metrics.prom] \
+        [--precision quickstart_precision.json] [--out report.md]
+
+All joins are optional: the report renders from the journal alone and
+grows sections as artifacts are supplied.  ``--trace`` accepts the
+engine's ``Tracer`` export (validated via
+:func:`~repro.obs.trace.validate_chrome_trace` first — a malformed
+artifact fails loudly, not silently); ``--metrics`` a Prometheus text
+snapshot (such as the bench's ``--metrics-out``); ``--precision`` either
+the quickstart's JSON snapshot (with ``loss_scale_trajectory``) or a
+Prometheus text export of the precision registry.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.journal import read_journal
+
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)$')
+_LABEL_RE = re.compile(r'(\w+)="((?:[^"\\]|\\.)*)"')
+
+
+def _unescape(v: str) -> str:
+    return re.sub(r"\\(.)",
+                  lambda m: {"n": "\n"}.get(m.group(1), m.group(1)), v)
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Parse Prometheus text exposition into ``{series_name: value}`` —
+    the inverse of ``Registry.snapshot()``'s naming (label values
+    unescaped)."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            continue
+        name, labels, value = m.groups()
+        key = name
+        if labels:
+            inner = ",".join(
+                f'{k}="{_unescape(v)}"'
+                for k, v in _LABEL_RE.findall(labels))
+            key = f"{name}{{{inner}}}"
+        try:
+            out[key] = float(value)
+        except ValueError:
+            continue
+    return out
+
+
+def _fmt_s(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    if v >= 1.0:
+        return f"{v:.3f}s"
+    return f"{v * 1e3:.2f}ms"
+
+
+def _pct(a: Optional[float], b: Optional[float]) -> str:
+    if a is None or b is None or b <= 0:
+        return ""
+    return f" ({100.0 * a / b:.0f}%)"
+
+
+def _request_report(rid: int, sub: dict, res: Optional[dict],
+                    cancelled: set, trace_spans: Optional[dict],
+                    tick_events: Dict[int, List[str]]) -> List[str]:
+    lines = [f"### request {rid}"]
+    dl = sub.get("deadline_ms")
+    lines.append(
+        f"- submitted: prompt {len(sub['prompt'])} tokens, "
+        f"max_new {sub['max_new']}"
+        + (f", deadline {dl:g}ms" if dl is not None else ""))
+    for ev in tick_events.get(rid, ()):
+        lines.append(f"- {ev}")
+    if res is None:
+        verdict = ("cancel requested, never retired"
+                   if rid in cancelled else "in flight")
+        lines.append(f"- **no result in journal** ({verdict} when the "
+                     f"recording stopped)")
+        return lines
+    m = res.get("m", {})
+    total = None
+    if m.get("queue_wait") is not None and m.get("prefill_s") is not None \
+            and m.get("decode_s") is not None:
+        total = m["queue_wait"] + m["prefill_s"] + m["decode_s"]
+    lines.append(
+        f"- outcome: **{res['status']}**, {len(res['tokens'])} tokens"
+        + (f" — {m['error']}" if m.get("error") else ""))
+    phases = [("queue wait", m.get("queue_wait")),
+              ("prefill", m.get("prefill_s")),
+              ("decode", m.get("decode_s"))]
+    phase_txt = ", ".join(
+        f"{name} {_fmt_s(v)}{_pct(v, total)}" for name, v in phases)
+    lines.append(f"- phases: {phase_txt} "
+                 f"(TTFT {_fmt_s(m.get('ttft'))})")
+    attribution = []
+    if m.get("preemptions"):
+        attribution.append(
+            f"preempted {m['preemptions']}x "
+            f"({_fmt_s(m.get('preempted_s'))} evicted + recompute)")
+    if m.get("cached_prefix"):
+        attribution.append(
+            f"prefix cache absorbed {m['cached_prefix']} prefill tokens")
+    if m.get("proposed"):
+        rate = m.get("accepted", 0) / max(m["proposed"], 1)
+        attribution.append(
+            f"speculation accepted {m.get('accepted', 0)}/{m['proposed']} "
+            f"drafts ({rate:.0%})")
+    if attribution:
+        lines.append("- attribution: " + "; ".join(attribution))
+    if trace_spans is not None and rid in trace_spans:
+        spans = trace_spans[rid]
+        parts = [f"{name} {n}x/{_fmt_s(dur / 1e6)}"
+                 for name, (n, dur) in sorted(spans.items())]
+        lines.append(f"- trace: {', '.join(parts)}")
+    return lines
+
+
+def analyze(journal_path, trace_path=None, metrics_path=None,
+            precision_path=None) -> dict:
+    """Join the artifacts into a structured report (see :func:`render`)."""
+    header, events = read_journal(journal_path)
+    truncated = any(ev["ev"] == "truncated" for ev in events)
+    submits = {ev["rid"]: ev for ev in events if ev["ev"] == "submit"}
+    results = {ev["rid"]: ev for ev in events if ev["ev"] == "result"}
+    cancelled = {ev["rid"] for ev in events if ev["ev"] == "cancel"}
+    ticks = [ev for ev in events if ev["ev"] == "tick"]
+
+    # per-request lifecycle markers scanned out of the tick digests
+    tick_events: Dict[int, List[str]] = {}
+    for t in ticks:
+        d = t["d"]
+        for rid in d.get("admitted", ()):
+            tick_events.setdefault(rid, []).append(
+                f"admitted at tick {t['i']}")
+        for rid in d.get("preempted", ()):
+            tick_events.setdefault(rid, []).append(
+                f"preempted at tick {t['i']}")
+        for rid, status in d.get("finished", ()):
+            tick_events.setdefault(rid, []).append(
+                f"retired at tick {t['i']} ({status})")
+
+    kinds: Dict[str, int] = {}
+    for t in ticks:
+        k = t["d"].get("kind", "?")
+        kinds[k] = kinds.get(k, 0) + 1
+    statuses: Dict[str, int] = {}
+    for res in results.values():
+        statuses[res["status"]] = statuses.get(res["status"], 0) + 1
+    last = ticks[-1]["d"] if ticks else {}
+
+    trace_spans: Optional[Dict[int, Dict[str, Tuple[int, float]]]] = None
+    engine_phases: Optional[Dict[str, Tuple[int, float]]] = None
+    if trace_path is not None:
+        from repro.obs.trace import validate_chrome_trace
+        with open(trace_path) as f:
+            tev = validate_chrome_trace(json.load(f))
+        trace_spans = {}
+        engine_phases = {}
+        for ev in tev:
+            if ev["ph"] != "X":
+                continue
+            rid = ev.get("args", {}).get("rid")
+            if rid is not None:
+                n, dur = trace_spans.setdefault(rid, {}).get(
+                    ev["name"], (0, 0.0))
+                trace_spans[rid][ev["name"]] = (n + 1, dur + ev["dur"])
+            elif ev["tid"] == 0:
+                n, dur = engine_phases.get(ev["name"], (0, 0.0))
+                engine_phases[ev["name"]] = (n + 1, dur + ev["dur"])
+
+    metrics: Optional[Dict[str, float]] = None
+    if metrics_path is not None:
+        with open(metrics_path) as f:
+            metrics = parse_prometheus(f.read())
+
+    precision: Optional[dict] = None
+    if precision_path is not None:
+        with open(precision_path) as f:
+            text = f.read()
+        try:
+            precision = {"kind": "json", "data": json.loads(text)}
+        except json.JSONDecodeError:
+            precision = {"kind": "prom", "data": parse_prometheus(text)}
+
+    return {"journal": str(journal_path), "header": header,
+            "truncated": truncated, "n_ticks": len(ticks),
+            "kinds": kinds, "statuses": statuses, "last_tick": last,
+            "submits": submits, "results": results,
+            "cancelled": cancelled, "tick_events": tick_events,
+            "trace_spans": trace_spans, "engine_phases": engine_phases,
+            "metrics": metrics, "precision": precision}
+
+
+def render(report: dict) -> str:
+    """Render :func:`analyze`'s output as a markdown incident report."""
+    h = report["header"]
+    eng = h.get("engine", {})
+    lines = ["# Serve postmortem", "",
+             f"journal: `{report['journal']}` "
+             f"(schema v{h.get('schema')})", ""]
+    lines.append(
+        f"- engine: {h.get('config', {}).get('name', '?')} — "
+        f"{eng.get('n_slots')} slots, kv={eng.get('kv_dtype')}, "
+        f"prefix_cache={eng.get('prefix_cache')}, "
+        f"spec_tokens={eng.get('spec_tokens')}, "
+        f"preempt={eng.get('preempt')}")
+    if h.get("faults"):
+        f = h["faults"]
+        parts = []
+        if f.get("poison"):
+            parts.append(f"poison {sorted(f['poison'])}")
+        if f.get("fail_steps"):
+            parts.append(f"fail_steps {f['fail_steps']}")
+        if f.get("exhaust"):
+            parts.append(f"{len(f['exhaust'])} exhaust window(s)")
+        if f.get("advances"):
+            parts.append(f"clock advances at ticks "
+                         f"{sorted(f['advances'])}")
+        lines.append(f"- fault schedule: {', '.join(parts) or 'none'}")
+    kinds = ", ".join(f"{k}:{n}" for k, n in sorted(report["kinds"].items()))
+    lines.append(f"- drive: {report['n_ticks']} ticks ({kinds or 'none'}), "
+                 f"{len(report['submits'])} requests submitted")
+    statuses = ", ".join(f"{k}:{n}"
+                         for k, n in sorted(report["statuses"].items()))
+    lines.append(f"- outcomes: {statuses or 'none recorded'}")
+    last = report["last_tick"]
+    if last:
+        pool = last.get("pool", [0] * 5)
+        pre = last.get("prefix", [0] * 3)
+        lines.append(
+            f"- final pool: {pool[0]} free / {pool[1]} used / "
+            f"{pool[2]} cached / {pool[3]} shared / {pool[4]} held pages")
+        lines.append(
+            f"- prefix cache lifetime: {pre[0]} hits, {pre[1]} misses, "
+            f"{pre[2]} COW copies")
+    if report["truncated"]:
+        lines.append("- **journal truncated** (hit its max_events bound; "
+                     "replay is unavailable, the story below covers the "
+                     "recorded prefix)")
+    lines.append("")
+
+    lines.append("## Requests")
+    lines.append("")
+    for rid in sorted(report["submits"]):
+        lines.extend(_request_report(
+            rid, report["submits"][rid], report["results"].get(rid),
+            report["cancelled"], report["trace_spans"],
+            report["tick_events"]))
+        lines.append("")
+
+    if report["engine_phases"]:
+        lines.append("## Engine phase time (trace)")
+        lines.append("")
+        total = report["engine_phases"].get("tick", (0, 0.0))[1]
+        for name, (n, dur) in sorted(report["engine_phases"].items(),
+                                     key=lambda kv: -kv[1][1]):
+            share = (f" ({100.0 * dur / total:.0f}% of tick time)"
+                     if total > 0 and name != "tick" else "")
+            lines.append(f"- {name}: {n} spans, "
+                         f"{_fmt_s(dur / 1e6)}{share}")
+        lines.append("")
+
+    if report["metrics"] is not None:
+        m = report["metrics"]
+        lines.append("## Engine metrics (Prometheus snapshot)")
+        lines.append("")
+
+        def _mean(stem: str) -> Optional[float]:
+            c = m.get(f"{stem}_count")
+            return (m.get(f"{stem}_sum", 0.0) / c) if c else None
+
+        for stem, label in (("serve_queue_wait_seconds", "queue wait"),
+                            ("serve_prefill_seconds", "prefill"),
+                            ("serve_decode_seconds", "decode"),
+                            ("serve_ttft_seconds", "TTFT"),
+                            ("serve_itl_seconds", "ITL")):
+            mean = _mean(stem)
+            if mean is not None:
+                lines.append(
+                    f"- mean {label}: {_fmt_s(mean)} "
+                    f"(n={int(m.get(stem + '_count', 0))})")
+        for name, label in (("serve_preemptions_total", "preemptions"),
+                            ("serve_cow_copies_total", "COW copies"),
+                            ("serve_prefix_hits_total", "prefix hits"),
+                            ("serve_timeouts_total", "timeouts"),
+                            ("serve_cancelled_total", "cancellations"),
+                            ("serve_nonfinite_total", "nonfinite kills"),
+                            ("serve_failed_total", "failures")):
+            if name in m:
+                lines.append(f"- {label}: {int(m[name])}")
+        lines.append("")
+
+    if report["precision"] is not None:
+        lines.append("## Precision telemetry")
+        lines.append("")
+        p = report["precision"]
+        if p["kind"] == "json":
+            data = p["data"]
+            traj = data.get("loss_scale_trajectory")
+            if traj:
+                lines.append(
+                    f"- loss scale trajectory: start {traj[0]:g}, "
+                    f"end {traj[-1]:g}, min {min(traj):g}, "
+                    f"max {max(traj):g} over {len(traj)} steps")
+            for k in ("overflow_steps", "skipped_steps", "growths",
+                      "backoffs", "steps"):
+                if k in data:
+                    lines.append(f"- {k}: {data[k]}")
+        else:
+            for key, v in sorted(p["data"].items()):
+                if key.startswith(("train_loss_scale",
+                                   "train_overflow", "train_skipped",
+                                   "train_steps")):
+                    lines.append(f"- {key}: {v:g}")
+        lines.append("")
+
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.postmortem",
+        description="Render a flight-recorder journal (plus optional "
+                    "trace/metrics/precision artifacts) as a per-request "
+                    "incident report.")
+    ap.add_argument("journal", help="flight-recorder journal JSONL")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace JSON from the same drive "
+                         "(Tracer.export)")
+    ap.add_argument("--metrics", default=None,
+                    help="Prometheus text snapshot "
+                         "(engine.prometheus() / --metrics-out)")
+    ap.add_argument("--precision", default=None,
+                    help="PrecisionStats export: quickstart JSON or "
+                         "Prometheus text (quickstart.py --metrics-out)")
+    ap.add_argument("--out", default=None,
+                    help="write the markdown report here instead of stdout")
+    args = ap.parse_args(argv)
+    report = analyze(args.journal, trace_path=args.trace,
+                     metrics_path=args.metrics,
+                     precision_path=args.precision)
+    text = render(report)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"postmortem report -> {args.out}")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,10 +44,25 @@ def _check_name(name: str) -> str:
     return name
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus exposition escaping for label values: backslash first
+    (so the other escapes aren't double-escaped), then newline and
+    quote.  Without this, a label value containing ``"`` or a newline
+    corrupts every sample after it in the scrape."""
+    return (v.replace("\\", "\\\\").replace("\n", "\\n")
+            .replace('"', '\\"'))
+
+
+def _escape_help(h: str) -> str:
+    """HELP text escaping: backslash and newline (quotes are legal)."""
+    return h.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(label_names: Sequence[str], key: Tuple[str, ...]) -> str:
     if not label_names:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in zip(label_names, key))
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"'
+                     for k, v in zip(label_names, key))
     return "{" + inner + "}"
 
 
@@ -254,25 +269,8 @@ class Registry:
         """Prometheus text exposition format (the ``.prom`` artifact)."""
         lines: List[str] = []
         for m in self._metrics.values():
-            if m.help:
-                lines.append(f"# HELP {m.name} {m.help}")
-            lines.append(f"# TYPE {m.name} {m.kind}")
-            if isinstance(m, Histogram):
-                for key in sorted(m._series):
-                    lbl = dict(zip(m.label_names, key))
-                    cum = 0
-                    for edge, n in zip(m.edges, m._buckets[key]):
-                        cum += n
-                        names = m.label_names + ("le",)
-                        sfx = _fmt_labels(names, key + (_fmt_value(edge),))
-                        lines.append(f"{m.name}_bucket{sfx} {cum}")
-                    sfx = _fmt_labels(m.label_names, key)
-                    lines.append(
-                        f"{m.name}_sum{sfx} {_fmt_value(m._sums[key])}")
-                    lines.append(f"{m.name}_count{sfx} {cum}")
-            else:
-                for suffix, value in m.series():
-                    lines.append(f"{m.name}{suffix} {_fmt_value(value)}")
+            lines.extend(_family_header_lines(m))
+            lines.extend(_family_sample_lines(m))
         return "\n".join(lines) + ("\n" if lines else "")
 
     def json_dump(self, path: Optional[str] = None) -> str:
@@ -284,6 +282,36 @@ class Registry:
         return text
 
 
+def _family_header_lines(m: _Metric) -> List[str]:
+    """The one-per-family ``# HELP`` / ``# TYPE`` comment lines."""
+    lines: List[str] = []
+    if m.help:
+        lines.append(f"# HELP {m.name} {_escape_help(m.help)}")
+    lines.append(f"# TYPE {m.name} {m.kind}")
+    return lines
+
+
+def _family_sample_lines(m: _Metric) -> List[str]:
+    """One metric's sample lines, no headers (shared by
+    :meth:`Registry.prometheus` and :func:`merged_prometheus`)."""
+    lines: List[str] = []
+    if isinstance(m, Histogram):
+        for key in sorted(m._series):
+            cum = 0
+            for edge, n in zip(m.edges, m._buckets[key]):
+                cum += n
+                names = m.label_names + ("le",)
+                sfx = _fmt_labels(names, key + (_fmt_value(edge),))
+                lines.append(f"{m.name}_bucket{sfx} {cum}")
+            sfx = _fmt_labels(m.label_names, key)
+            lines.append(f"{m.name}_sum{sfx} {_fmt_value(m._sums[key])}")
+            lines.append(f"{m.name}_count{sfx} {cum}")
+    else:
+        for suffix, value in m.series():
+            lines.append(f"{m.name}{suffix} {_fmt_value(value)}")
+    return lines
+
+
 def merged_snapshot(*registries: Registry) -> Dict[str, float]:
     """Union of several registries' snapshots (engine + stats exports)."""
     out: Dict[str, float] = {}
@@ -293,5 +321,33 @@ def merged_snapshot(*registries: Registry) -> Dict[str, float]:
 
 
 def merged_prometheus(*registries: Registry) -> str:
-    """Concatenated text exposition of several registries."""
-    return "".join(r.prometheus() for r in registries)
+    """Text exposition of several registries as one scrape document.
+
+    Registries sharing a metric family (same name) contribute their
+    series under a **single** ``# HELP``/``# TYPE`` header — the
+    exposition format allows each family's headers at most once per
+    scrape, and Prometheus rejects documents that repeat them.  A name
+    registered with different *kinds* across registries is a schema bug
+    and raises ``ValueError``.
+    """
+    order: List[str] = []
+    first: Dict[str, _Metric] = {}
+    samples: Dict[str, List[str]] = {}
+    for r in registries:
+        for m in r.metrics():
+            seen = first.get(m.name)
+            if seen is None:
+                first[m.name] = m
+                order.append(m.name)
+                samples[m.name] = []
+            elif seen.kind != m.kind:
+                raise ValueError(
+                    f"merged_prometheus: metric {m.name!r} is a "
+                    f"{seen.kind} in one registry and a {m.kind} in "
+                    f"another — one family name, one type")
+            samples[m.name].extend(_family_sample_lines(m))
+    lines: List[str] = []
+    for name in order:
+        lines.extend(_family_header_lines(first[name]))
+        lines.extend(samples[name])
+    return "\n".join(lines) + ("\n" if lines else "")

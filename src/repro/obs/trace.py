@@ -130,11 +130,19 @@ def validate_chrome_trace(
 
     Checks the invariants the CI artifact consumers rely on:
 
-    - every event carries ``ph``, ``ts``, ``pid``, ``tid`` and ``name``;
-    - "X" events carry a non-negative ``dur``;
+    - every event is a JSON object carrying ``ph``, ``ts``, ``pid``,
+      ``tid`` and ``name``, with a numeric ``ts``;
+    - "X" events carry a numeric, non-negative ``dur``;
+    - "C" (counter) events carry a non-empty ``args`` dict of numeric
+      series — Perfetto silently drops malformed counters, so a schema
+      bug here would otherwise pass validation and render as nothing;
     - within each ``(pid, tid)`` track, "X" spans strictly nest — no
       partial overlap (guaranteed by construction: a ``span()`` is
-      emitted on exit, after every child has ended).
+      emitted on exit, after every child has ended).  Instants and
+      counters never participate in nesting, and a ring buffer that
+      evicted a span's *parent* still validates: children are emitted
+      (and evicted) before their parents, so any suffix of the event
+      stream keeps the nesting invariant.
 
     Raises ``ValueError`` naming the first offending event.
     """
@@ -144,18 +152,42 @@ def validate_chrome_trace(
             raise ValueError("trace object has no traceEvents list")
     else:
         events = list(trace)
+
+    def _numeric(v) -> bool:
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+
     tracks: Dict[tuple, List[dict]] = {}
     for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(
+                f"event {i} is {type(ev).__name__}, not a trace-event "
+                f"object")
         for field in ("ph", "ts", "pid", "tid", "name"):
             if field not in ev:
                 raise ValueError(f"event {i} ({ev.get('name')!r}) missing "
                                  f"required field {field!r}")
+        if not _numeric(ev["ts"]):
+            raise ValueError(
+                f"event {i} ({ev['name']!r}): ts must be a number, got "
+                f"{ev['ts']!r}")
         if ev["ph"] == "X":
             dur = ev.get("dur")
-            if dur is None or dur < 0:
+            if not _numeric(dur) or dur < 0:
                 raise ValueError(
                     f"event {i} ({ev['name']!r}): X event needs dur >= 0")
             tracks.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+        elif ev["ph"] == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                raise ValueError(
+                    f"event {i} ({ev['name']!r}): C (counter) event needs "
+                    f"a non-empty args dict of numeric series, got "
+                    f"{args!r}")
+            for series, v in args.items():
+                if not _numeric(v):
+                    raise ValueError(
+                        f"event {i} ({ev['name']!r}): counter series "
+                        f"{series!r} must be numeric, got {v!r}")
     for (pid, tid), spans in tracks.items():
         # sort children-inside-parents: by start, widest first on ties
         spans.sort(key=lambda e: (e["ts"], -e["dur"]))

@@ -81,6 +81,29 @@ it reads host state plus the two ``(B,)`` arrays each step already
 transfers — zero added device syncs (pinned by tests/test_obs.py), <3%
 tok/s (the bench's ``serving_obs_overhead_pct`` row).
 
+**Flight recorder & postmortem** — pass
+``journal=repro.obs.JournalRecorder(path, param_seed=...)`` and the
+engine event-sources the *entire drive* into an append-only JSONL
+journal: the config fingerprint (model config + every constructor knob),
+the :class:`FaultInjector` schedule, every clock sample, every
+``submit``/``cancel``, a per-tick digest (plan kind/counts,
+admitted/preempted/finished rids, pool and prefix-cache state, and a
+rolling hash chained over each accepted token) and every request result
+with its phase breakdown (queue wait / prefill / decode / preempted
+time — also exported as the ``serve_queue_wait_seconds`` /
+``serve_prefill_seconds`` / ``serve_decode_seconds`` histograms).
+``repro.obs.replay_journal(path)`` — or ``python -m repro.obs.journal
+path`` — rebuilds the engine from the header alone (params
+re-initialized from ``param_seed``), re-drives the recorded inputs with
+the recorded clock, and asserts token identity plus per-tick digest
+equality, naming the **first divergent tick** on mismatch; ``python -m
+repro.obs.postmortem path [--trace ...] [--metrics ...]
+[--precision ...]`` joins the journal with the Chrome trace, Prometheus
+snapshot and precision telemetry into a per-request incident report.
+Recording reads only host-side state (same zero-added-syncs pin; the
+bench's ``serving_journal_overhead_pct`` row holds it <3% tok/s), and
+CI records, replays and renders the scripted chaos drive every run.
+
 The speculative loop (``spec_tokens > 0``) is propose/verify/commit:
 
 1. **propose** — the :class:`~repro.serve.propose.Proposer` drafts up to

@@ -754,6 +754,22 @@ class PagedKVCache:
         :meth:`hold_pages`)."""
         return len(self._held)
 
+    @property
+    def prefix_hits(self) -> int:
+        """Cumulative prefix-cache page hits (0 when uninstrumented) —
+        host ints for the flight-recorder tick digest."""
+        return int(self._hits.total) if self._hits is not None else 0
+
+    @property
+    def prefix_misses(self) -> int:
+        """Cumulative prefix-index probe misses (0 when uninstrumented)."""
+        return int(self._misses.total) if self._misses is not None else 0
+
+    @property
+    def cow_copies(self) -> int:
+        """Cumulative copy-on-write page copies (0 when uninstrumented)."""
+        return int(self._cows.total) if self._cows is not None else 0
+
     def check_invariants(self) -> None:
         """Every physical page is in exactly one state — free, held,
         referenced (refcount >= 1), or cached — refcounts equal table

@@ -67,6 +67,18 @@ host state and the two ``(B,)`` arrays the step already transfers
 ``step()`` (pinned by tests/test_obs.py) and <3% tok/s on the bench
 workload (``serving_obs_overhead_pct``).
 
+Flight recorder (``repro.obs.journal``): passing
+``journal=JournalRecorder(path)`` event-sources the whole drive — config
+fingerprint, fault schedule, every clock sample, ``submit``/``cancel``,
+a per-tick digest (plan summary, pool/prefix counters, a rolling hash
+over each slot's sampled tokens) and every result — into an append-only
+JSONL file that ``replay_journal(path)`` re-drives deterministically,
+naming the first divergent tick on mismatch, and that
+``python -m repro.obs.postmortem`` renders as a per-request incident
+report.  Recording reads the same host-side state the tracer does (zero
+added device syncs — the test_obs transfer pin holds with the journal
+enabled) and costs <3% tok/s (``serving_journal_overhead_pct``).
+
 Resilience: the engine assumes an adversarial world, not a cooperative
 one.  Admission is bounded (``max_queue`` -> :class:`EngineOverloaded`
 backpressure), pool pressure is survived by preempting the youngest
@@ -198,7 +210,10 @@ class ServeEngine:
     accepts a :class:`~repro.serve.faults.FaultInjector` (chaos
     testing); ``clock`` an alternative ``time.perf_counter`` (deadline
     tests use :class:`~repro.serve.faults.FakeClock` — defaults to the
-    injector's clock when it has one).
+    injector's clock when it has one).  ``journal`` accepts a
+    :class:`~repro.obs.journal.JournalRecorder`: the flight recorder
+    event-sources the drive for deterministic replay and postmortem
+    analysis (see the module docstring and :mod:`repro.obs.journal`).
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -217,7 +232,8 @@ class ServeEngine:
                  faults: Optional[FaultInjector] = None,
                  clock: Optional[Callable[[], float]] = None,
                  registry: Optional[Registry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 journal=None):
         if not cfg.supports_decode():
             raise ValueError(
                 f"{cfg.name} ({cfg.family}) does not support decode — "
@@ -291,6 +307,33 @@ class ServeEngine:
             clock = faults.clock
         self._clock: Callable[[], float] = (clock if clock is not None
                                             else time.perf_counter)
+        # flight recorder (repro.obs.journal — duck-typed so the replay
+        # hook plugs in the same seam): wrap the clock FIRST so every
+        # sample the engine ever draws is journaled, then hand over the
+        # config fingerprint + fault schedule for the header
+        self.journal = journal
+        if journal is not None:
+            self._clock = journal.wrap_clock(self._clock)
+            journal.on_attach(
+                {"config": dataclasses.asdict(cfg),
+                 "engine": {
+                     "n_slots": n_slots, "max_seq": max_seq,
+                     "page_size": page_size,
+                     "num_pages": self.cache.num_pages,
+                     "chunk_size": chunk_size,
+                     "max_batched_tokens": max_batched_tokens,
+                     "sampling": dataclasses.asdict(sampling),
+                     "spec_tokens": self.spec_tokens,
+                     "proposer": (None if self.proposer is None
+                                  else type(self.proposer).__name__),
+                     "use_kernel": bool(use_kernel),
+                     "pages_per_block": pages_per_block,
+                     "kv_dtype": self.kv_format.name,
+                     "seed": seed,
+                     "prefix_cache": self.cache.prefix_cache,
+                     "max_queue": max_queue,
+                     "preempt": bool(preempt)}},
+                faults)
         self._deadlines: dict[int, float] = {}   # rid -> absolute expiry
         self._cancelled: set[int] = set()        # applied at tick start
         # the always-present poison operand for the jitted step (host
@@ -384,6 +427,8 @@ class ServeEngine:
             request_id=rid, prompt_len=len(prompt), submit_time=now)
         if deadline_ms is not None:
             self._deadlines[rid] = now + deadline_ms / 1e3
+        if self.journal is not None:
+            self.journal.record_submit(rid, prompt, max_new, deadline_ms)
         if self.tracer is not None:
             self.tracer.instant("submit", tid=TID_ENGINE, rid=rid,
                                 prompt_len=len(prompt), max_new=max_new)
@@ -400,6 +445,8 @@ class ServeEngine:
         if rid not in self._inflight:
             return False
         self._cancelled.add(rid)
+        if self.journal is not None:
+            self.journal.record_cancel(rid)
         return True
 
     def _admission_estimate(self) -> Optional[float]:
@@ -448,9 +495,22 @@ class ServeEngine:
                     self._inflight[slot.req.request_id] \
                         .cached_prefix_tokens += slot.fed
         for rid in preempted:
-            self._inflight[rid].preemptions += 1
+            rm = self._inflight[rid]
+            rm.preemptions += 1
+            rm.last_evict_time = t0
             if tr is not None:
                 tr.instant("preempt", tid=TID_ENGINE, rid=rid)
+        # phase bookkeeping: first admission ends queue wait; a
+        # re-admission after preemption closes the preempted-recompute gap
+        # (processed after the preempted loop so a same-tick
+        # evict-and-readmit charges zero preempted time)
+        for rid in admitted:
+            rm = self._inflight[rid]
+            if rm.admit_time is None:
+                rm.admit_time = t0
+            if rm.last_evict_time is not None:
+                rm.preempted_seconds += t0 - rm.last_evict_time
+                rm.last_evict_time = None
         if tr is not None:
             t_admit = tr.now_us()
             tr.complete("admit", tick_us, t_admit - tick_us,
@@ -461,6 +521,7 @@ class ServeEngine:
                 tr.instant("admit", tid=TID_ENGINE, rid=rid)
         if self.scheduler.busy_slots == 0:
             self._last_tick_stepped = False
+            self._journal_tick("idle", admitted, preempted, results)
             return results
         self._last_tick_stepped = True
         if tr is not None:
@@ -480,8 +541,7 @@ class ServeEngine:
         if tr is not None:
             dev_us = tr.now_us()
             tr.complete("plan", plan_us, dev_us - plan_us, tid=TID_ENGINE,
-                        args={"kind": plan.kind, "tokens": plan.n_tokens,
-                              "drafts": plan.n_draft})
+                        args=plan.summary())
         try:
             if self.faults is not None:
                 # raised before the device call, while the donated page
@@ -546,7 +606,13 @@ class ServeEngine:
             results.extend(self._fail_plan(plan, slot_rids, slot_objs,
                                            err, self._clock()))
             if isinstance(err, InjectedFault):
-                return results        # scripted fault: keep serving
+                # scripted fault: keep serving.  The tick is journaled
+                # (deterministic — the schedule is in the header); a real
+                # exception re-raises WITHOUT a tick record, so replay
+                # knows the final results belong to an aborted tick.
+                self._journal_tick("fault", admitted, preempted, results,
+                                   plan=plan)
+                return results
             raise
         first = set(outcome.first_token)
         for rid, _ in outcome.emitted:
@@ -579,9 +645,45 @@ class ServeEngine:
             decode_tokens=np.where(plan.kinds == DECODE, plan.valid, 0),
             proposed=plan.n_draft,
             accepted=int(accept.sum()))
+        self._journal_tick(plan.kind, admitted, preempted, results,
+                           plan=plan, slot_rids=slot_rids, accept=accept,
+                           token=token, outcome=outcome)
         return results
 
     # -- resilience internals -----------------------------------------------
+
+    def _journal_tick(self, kind: str, admitted, preempted, results,
+                      plan=None, slot_rids=None, accept=None, token=None,
+                      outcome=None) -> None:
+        """Feed the flight recorder one tick's digest.
+
+        Reads only host-side state: the plan summary, the scheduler's
+        admit/preempt lists, pool/prefix counters (host ints on the
+        cache), and the two already-transferred ``(B,)`` arrays — like
+        the tracer, zero added device syncs (the test_obs transfer pin
+        runs with the journal enabled).
+        """
+        if self.journal is None:
+            return
+        c = self.cache
+        digest = {"kind": kind,
+                  "admitted": list(admitted), "preempted": list(preempted),
+                  "tokens": plan.n_tokens if plan is not None else 0,
+                  "drafts": plan.n_draft if plan is not None else 0,
+                  "accepted": int(accept.sum()) if accept is not None else 0,
+                  "emitted": outcome.n_tokens if outcome is not None else 0,
+                  "finished": [[r.request_id, r.status] for r in results],
+                  "pool": [c.free_pages, c.used_pages, c.cached_pages,
+                           c.shared_pages, c.held_pages],
+                  "prefix": [c.prefix_hits, c.prefix_misses, c.cow_copies]}
+        tok_items = []
+        if token is not None:
+            for slot_id, rid in enumerate(slot_rids):
+                if rid is None or plan.valid[slot_id] == 0:
+                    continue
+                tok_items.append((slot_id, rid, int(token[slot_id]),
+                                  int(accept[slot_id])))
+        self.journal.record_tick(digest, tok_items)
 
     def _finish_request(self, rid: int, prompt: List[int],
                         tokens: List[int], status: str, now: float,
@@ -606,6 +708,8 @@ class ServeEngine:
             self.tracer.instant(status, tid=TID_ENGINE, rid=rid)
         result = RequestResult(rid, list(prompt), list(tokens), rm, status)
         self._results.append(result)
+        if self.journal is not None:
+            self.journal.record_result(result)
         return result
 
     def _terminate(self, rid: int, status: str, now: float,

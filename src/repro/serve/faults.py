@@ -84,6 +84,7 @@ class FaultInjector:
 
     def __init__(self, seed: int = 0, clock: Optional[FakeClock] = None):
         self.rng = np.random.default_rng(seed)
+        self._seed = int(seed)              # journaled by schedule()
         self.clock = clock
         self.tick = -1                      # advanced by begin_tick
         self.log: List[Tuple] = []
@@ -125,6 +126,45 @@ class FaultInjector:
         the top of tick ``tick`` (requires ``FaultInjector(clock=...)``)."""
         self._advances[int(tick)] = self._advances.get(int(tick), 0.0) + dt
         return self
+
+    def schedule(self) -> dict:
+        """JSON-serializable snapshot of the scripted schedule — the
+        flight recorder journals it at engine attach, which happens
+        before any tick fires (``fail_device_step`` / ``advance_clock``
+        entries are consumed as they fire, so capture-then-replay only
+        round-trips from the pre-drive state).
+
+        :meth:`from_schedule` inverts it.
+        """
+        return {"seed": self._seed,
+                "poison": {str(r): t for r, t in self._poison.items()},
+                "fail_steps": sorted(self._fail_steps),
+                "exhaust": [dict(ex) for ex in self._exhaust],
+                "advances": {str(t): dt
+                             for t, dt in self._advances.items()},
+                "has_clock": self.clock is not None}
+
+    @classmethod
+    def from_schedule(cls, sched: dict) -> "FaultInjector":
+        """Rebuild an injector from :meth:`schedule` — same scripted
+        events, fresh tick counter, and (when the original carried one)
+        a fresh :class:`FakeClock` so ``advance_clock`` entries have a
+        clock to move.  Used by ``replay_journal``: the replayed engine
+        reads time from the journal's recorded samples, so this clock
+        only absorbs the advances."""
+        inj = cls(seed=int(sched.get("seed", 0)),
+                  clock=FakeClock() if sched.get("has_clock") else None)
+        inj._poison = {int(r): (None if t is None else int(t))
+                       for r, t in sched.get("poison", {}).items()}
+        inj._fail_steps = {int(t) for t in sched.get("fail_steps", ())}
+        inj._exhaust = [
+            {"from": int(ex["from"]),
+             "until": None if ex["until"] is None else int(ex["until"]),
+             "pages": None if ex["pages"] is None else int(ex["pages"])}
+            for ex in sched.get("exhaust", ())]
+        inj._advances = {int(t): float(dt)
+                         for t, dt in sched.get("advances", {}).items()}
+        return inj
 
     @property
     def pending(self) -> bool:

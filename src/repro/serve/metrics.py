@@ -41,9 +41,12 @@ class RequestMetrics:
     request_id: int
     prompt_len: int
     submit_time: float
+    admit_time: Optional[float] = None   # first admission into a slot
     first_token_time: Optional[float] = None
     last_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    preempted_seconds: float = 0.0  # total time evicted awaiting re-admission
+    last_evict_time: Optional[float] = None  # set while preempted-and-waiting
     new_tokens: int = 0
     proposed_tokens: int = 0    # speculative drafts the verifier saw
     accepted_tokens: int = 0    # drafts the verifier accepted
@@ -64,6 +67,29 @@ class RequestMetrics:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submit_time
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds from submit to *first* admission into a slot — the
+        phase TTFT hides: time spent waiting behind the bounded queue."""
+        if self.admit_time is None:
+            return None
+        return self.admit_time - self.submit_time
+
+    @property
+    def prefill_seconds(self) -> Optional[float]:
+        """Seconds from first admission to first sampled token (chunked
+        prefill, including any preempted-recompute time in between)."""
+        if self.first_token_time is None or self.admit_time is None:
+            return None
+        return self.first_token_time - self.admit_time
+
+    @property
+    def decode_seconds(self) -> Optional[float]:
+        """Seconds from first token to finish (the decode phase)."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        return self.finish_time - self.first_token_time
 
     @property
     def decode_tok_per_s(self) -> Optional[float]:
@@ -124,6 +150,22 @@ class EngineStats:
             lo_exp=-14, hi_exp=4)
         self._ttft_hist = r.histogram(
             "serve_ttft_seconds", "submit-to-first-token (log2 buckets)",
+            lo_exp=-14, hi_exp=4)
+        # time-in-phase histograms: TTFT = queue wait + prefill, then
+        # decode until finish — queue wait is the phase a saturated
+        # engine hides inside TTFT (the postmortem CLI reads the same
+        # numbers per request from the flight-recorder journal)
+        self._queue_wait_hist = r.histogram(
+            "serve_queue_wait_seconds",
+            "submit-to-first-admission queue wait (log2 buckets)",
+            lo_exp=-14, hi_exp=4)
+        self._prefill_hist = r.histogram(
+            "serve_prefill_seconds",
+            "first-admission-to-first-token prefill time (log2 buckets)",
+            lo_exp=-14, hi_exp=4)
+        self._decode_hist = r.histogram(
+            "serve_decode_seconds",
+            "first-token-to-finish decode time (log2 buckets)",
             lo_exp=-14, hi_exp=4)
         self._occupancy_sum = 0.0
         self.itl_gaps: List[float] = []     # raw gaps: exact percentiles
@@ -220,6 +262,12 @@ class EngineStats:
         self._prompt_tokens.inc(rm.prompt_len)
         if rm.ttft is not None:
             self._ttft_hist.observe(rm.ttft)
+        if rm.queue_wait is not None:
+            self._queue_wait_hist.observe(rm.queue_wait)
+        if rm.prefill_seconds is not None:
+            self._prefill_hist.observe(rm.prefill_seconds)
+        if rm.decode_seconds is not None:
+            self._decode_hist.observe(rm.decode_seconds)
 
     # -- derived ------------------------------------------------------------
 

@@ -172,6 +172,13 @@ class StepPlan:
     def n_draft(self) -> int:
         return int(self.draft_len.sum())
 
+    def summary(self) -> dict:
+        """Host-int digest of the plan — the shared vocabulary of the
+        tracer's ``plan`` span args and the flight-recorder journal's
+        per-tick digest (:mod:`repro.obs.journal`)."""
+        return {"kind": self.kind, "tokens": self.n_tokens,
+                "drafts": self.n_draft}
+
 
 @dataclasses.dataclass
 class StepOutcome:

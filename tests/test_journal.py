@@ -1,0 +1,329 @@
+"""Flight recorder: journal record/replay identity + postmortem analyzer.
+
+The chaos drive exercised here is the full failure matrix in one
+recording — NaN-poisoned logits, a clock-jump deadline expiry, a
+cancellation, preemption ping-pong on a deliberately tight page pool,
+prefix-cache sharing, and an i8-quantized KV pool — and the pins are:
+
+- the journal replays it **token-identically** (every per-tick digest
+  and every request result equal) from the header alone, params rebuilt
+  from ``param_seed``;
+- a perturbed journal names the **first divergent tick** with both
+  digests, and a tampered result raises a result mismatch;
+- a truncated journal refuses to replay (``JournalTruncated``) but still
+  feeds the postmortem analyzer;
+- fingerprint drift (``JournalMismatch``), an unreplayable custom
+  proposer, and a missing ``param_seed`` all fail with actionable
+  errors, never a silent wrong replay;
+- the postmortem report tells each request's causal story (phases,
+  preemptions, prefix hits, deadline/cancel/nonfinite outcome) and joins
+  the trace / Prometheus / precision artifacts when supplied.
+"""
+import json
+
+import jax
+import pytest
+
+from repro import mpx, serve
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.obs import (JournalDivergence, JournalError, JournalRecorder,
+                       JournalTruncated, Tracer, read_journal,
+                       replay_journal)
+from repro.obs.journal import JournalMismatch, _Replayer
+from repro.obs.journal import main as journal_main
+from repro.obs.postmortem import analyze, parse_prometheus, render
+from repro.obs.postmortem import main as postmortem_main
+
+CFG = ModelConfig(
+    name="journal-test", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, pattern=("attn",), mlp="swiglu",
+    tie_embeddings=True, remat="none",
+)
+
+PARAM_SEED = 7
+PREFIX = list(range(1, 9))          # one full page, shared by most prompts
+
+
+def _chaos_drive(journal_path, tracer=None):
+    """One drive covering every failure path: poison (rid 3), deadline
+    expiry via clock jump (rid 4), cancel (rid 5), preemption ping-pong
+    between rid 1 and rid 2 on a 6-page pool, prefix-cache sharing of
+    PREFIX, i8 KV.  Deterministic: FakeClock + greedy sampling."""
+    params = mpx.cast_to_bfloat16(
+        T.init_params(jax.random.key(PARAM_SEED), CFG))
+    faults = (serve.FaultInjector(clock=serve.FakeClock())
+              .poison_logits(3)
+              .advance_clock(10, 100.0))
+    journal = JournalRecorder(journal_path, param_seed=PARAM_SEED)
+    engine = serve.ServeEngine(
+        CFG, params, n_slots=2, max_seq=64, page_size=8, num_pages=6,
+        chunk_size=16, kv_dtype="i8", prefix_cache=True,
+        faults=faults, tracer=tracer, journal=journal)
+    engine.submit(PREFIX + [40], max_new=3)                    # rid 0
+    engine.submit(PREFIX + [50], max_new=12)                   # rid 1
+    engine.submit([100 + i for i in range(17)], max_new=8)     # rid 2
+    engine.submit(PREFIX + [60, 61], max_new=4)                # rid 3 poison
+    engine.submit(PREFIX + [70, 71, 72], max_new=20,
+                  deadline_ms=50)                              # rid 4
+    rid_cx = engine.submit(PREFIX + [80, 81], max_new=8)       # rid 5
+    engine.step()
+    engine.step()
+    engine.cancel(rid_cx)
+    results = engine.drain()
+    journal.close()
+    return engine, results
+
+
+@pytest.fixture(scope="module")
+def chaos(tmp_path_factory):
+    path = tmp_path_factory.mktemp("journal") / "chaos.jsonl"
+    engine, results = _chaos_drive(str(path))
+    return {"path": str(path), "engine": engine,
+            "results": {r.request_id: r for r in results}}
+
+
+# --------------------------------------------------------------------------
+# record -> replay identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.serve
+def test_chaos_drive_covers_every_failure_path(chaos):
+    """The fixture drive must actually exercise what it claims to —
+    otherwise the replay pin below proves nothing."""
+    status = {rid: r.status for rid, r in chaos["results"].items()}
+    assert status == {0: "ok", 1: "ok", 2: "ok", 3: "failed",
+                      4: "timeout", 5: "cancelled"}
+    snap = chaos["engine"].metrics_snapshot()
+    assert snap["serve_preemptions_total"] >= 2     # the ping-pong fired
+    assert chaos["engine"].cache.prefix_hits >= 1   # sharing fired
+    assert chaos["results"][2].metrics.preempted_seconds > 0.0
+
+
+@pytest.mark.serve
+def test_replay_is_token_and_digest_identical(chaos):
+    report = replay_journal(chaos["path"])
+    assert report.ok
+    assert report.ticks >= 10
+    assert report.results == len(chaos["results"])
+    assert not report.result_mismatches
+    assert "replay OK" in report.summary()
+
+
+@pytest.mark.serve
+def test_journal_cli_replays(chaos, capsys):
+    assert journal_main([chaos["path"]]) == 0
+    assert "replay OK" in capsys.readouterr().out
+
+
+@pytest.mark.serve
+def test_journal_records_full_schema(chaos):
+    header, events = read_journal(chaos["path"])
+    assert header["schema"] == 1
+    assert header["param_seed"] == PARAM_SEED
+    assert header["config"]["name"] == "journal-test"
+    eng = header["engine"]
+    assert eng["kv_dtype"] == "i8" and eng["prefix_cache"] is True
+    assert header["faults"]["poison"] == {"3": None}
+    assert header["faults"]["advances"] == {"10": 100.0}
+    assert header["faults"]["has_clock"] is True
+    kinds = {ev["ev"] for ev in events}
+    assert {"clocks", "submit", "cancel", "tick", "result"} <= kinds
+    # per-request phase numbers ride the result records (satellite:
+    # postmortem reads them without recomputing)
+    res = [ev for ev in events if ev["ev"] == "result"]
+    assert len(res) == 6
+    for ev in res:
+        assert {"queue_wait", "prefill_s", "decode_s",
+                "preempted_s", "preemptions"} <= set(ev["m"])
+    m2 = next(ev["m"] for ev in res if ev["rid"] == 2)
+    assert m2["preemptions"] >= 1 and m2["preempted_s"] > 0.0
+
+
+# --------------------------------------------------------------------------
+# divergence / tamper / truncation diagnostics
+# --------------------------------------------------------------------------
+
+def _rewrite(src_path, dst_path, mutate):
+    """Copy a journal line by line, letting ``mutate(obj)`` edit records."""
+    with open(src_path) as f, open(dst_path, "w") as out:
+        for line in f:
+            obj = json.loads(line)
+            mutate(obj)
+            out.write(json.dumps(obj) + "\n")
+
+
+@pytest.mark.serve
+def test_perturbed_journal_names_first_divergent_tick(chaos, tmp_path):
+    bad = tmp_path / "perturbed.jsonl"
+    target = 3
+
+    def flip_tok(obj):
+        if obj["ev"] == "tick" and obj["i"] == target:
+            d = obj["d"]
+            d["tok"] = ("0" * 32 if d["tok"][0] != "0"
+                        else "f" + d["tok"][1:])
+
+    _rewrite(chaos["path"], bad, flip_tok)
+    with pytest.raises(JournalDivergence, match=f"diverged at tick {target}"):
+        replay_journal(str(bad))
+    try:
+        replay_journal(str(bad))
+    except JournalDivergence as err:
+        assert err.tick == target
+        assert err.recorded != err.replayed       # both digests carried
+    # CLI maps divergence to exit code 1, not a traceback
+    assert journal_main([str(bad)]) == 1
+
+
+@pytest.mark.serve
+def test_tampered_result_tokens_flagged(chaos, tmp_path):
+    bad = tmp_path / "tampered.jsonl"
+
+    def flip_token(obj):
+        if obj["ev"] == "result" and obj["rid"] == 0:
+            obj["tokens"][-1] = (obj["tokens"][-1] + 1) % 256
+
+    _rewrite(chaos["path"], bad, flip_token)
+    with pytest.raises(JournalError, match="result mismatch rid=0"):
+        replay_journal(str(bad))
+    report = replay_journal(str(bad), raise_on_divergence=False)
+    assert not report.ok and report.result_mismatches
+
+
+@pytest.mark.serve
+def test_truncated_journal_refuses_replay_but_feeds_postmortem(tmp_path):
+    path = tmp_path / "truncated.jsonl"
+    params = mpx.cast_to_bfloat16(
+        T.init_params(jax.random.key(PARAM_SEED), CFG))
+    journal = JournalRecorder(str(path), param_seed=PARAM_SEED,
+                              max_events=12)
+    engine = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                               page_size=8, chunk_size=16, journal=journal)
+    engine.submit(PREFIX + [40], max_new=8)
+    engine.submit(PREFIX + [50], max_new=8)
+    engine.drain()
+    journal.close()
+    assert journal.truncated
+    with pytest.raises(JournalTruncated, match="max_events"):
+        replay_journal(str(path))
+    assert journal_main([str(path)]) == 2
+    # the postmortem still reads the recorded prefix and says so
+    text = render(analyze(str(path)))
+    assert "journal truncated" in text
+
+
+def test_fingerprint_mismatch_names_the_drifted_paths(chaos):
+    header, _ = read_journal(chaos["path"])
+    rep = _Replayer(header, [])
+    live = {"config": header["config"], "engine": dict(header["engine"])}
+    live["engine"]["n_slots"] = 4
+    live["engine"]["kv_dtype"] = "bf16"
+    with pytest.raises(JournalMismatch) as err:
+        rep.on_attach(live, None)
+    msg = str(err.value)
+    assert "engine.n_slots" in msg and "engine.kv_dtype" in msg
+    assert "recorded 2" in msg          # both sides of the drift shown
+
+
+def test_custom_proposer_requires_explicit_instance(chaos, tmp_path):
+    bad = tmp_path / "proposer.jsonl"
+
+    def set_proposer(obj):
+        if obj["ev"] == "header":
+            obj["engine"]["proposer"] = "MyProposer"
+
+    _rewrite(chaos["path"], bad, set_proposer)
+    with pytest.raises(JournalError, match="custom proposer 'MyProposer'"):
+        replay_journal(str(bad))
+
+
+def test_missing_param_seed_is_actionable(chaos, tmp_path):
+    bad = tmp_path / "noseed.jsonl"
+
+    def drop_seed(obj):
+        if obj["ev"] == "header":
+            obj["param_seed"] = None
+
+    _rewrite(chaos["path"], bad, drop_seed)
+    with pytest.raises(JournalError, match="param_seed"):
+        replay_journal(str(bad))
+
+
+def test_corrupt_and_headerless_journals_rejected(tmp_path):
+    p = tmp_path / "corrupt.jsonl"
+    p.write_text('{"ev": "header", "schema": 1}\nnot json\n')
+    with pytest.raises(JournalError, match="not valid JSON"):
+        read_journal(str(p))
+    p.write_text('{"ev": "tick", "i": 0, "d": {}}\n')
+    with pytest.raises(JournalError, match="no header record"):
+        read_journal(str(p))
+    p.write_text('{"ev": "header", "schema": 99}\n')
+    with pytest.raises(JournalError, match="schema"):
+        read_journal(str(p))
+
+
+# --------------------------------------------------------------------------
+# postmortem analyzer
+# --------------------------------------------------------------------------
+
+@pytest.mark.serve
+def test_postmortem_tells_each_requests_story(chaos):
+    text = render(analyze(chaos["path"]))
+    assert "# Serve postmortem" in text
+    for rid in range(6):
+        assert f"### request {rid}" in text
+    # outcomes + the chaos schedule are named
+    assert "**failed**" in text and "**timeout**" in text \
+        and "**cancelled**" in text
+    assert "fault schedule" in text and "poison" in text
+    # the preempted requests carry attribution with evicted time
+    assert "preempted" in text
+    assert "prefix cache absorbed" in text
+    # phase decomposition renders per request
+    assert "queue wait" in text and "prefill" in text and "decode" in text
+    assert "prefix cache lifetime" in text
+
+
+@pytest.mark.serve
+def test_postmortem_joins_trace_metrics_precision(tmp_path):
+    tracer = Tracer(process_name="repro.serve.test")
+    engine, _ = _chaos_drive(str(tmp_path / "j.jsonl"), tracer=tracer)
+    trace_path = tmp_path / "trace.json"
+    tracer.export(str(trace_path))
+    metrics_path = tmp_path / "metrics.prom"
+    metrics_path.write_text(engine.prometheus())
+    precision_path = tmp_path / "precision.json"
+    precision_path.write_text(json.dumps(
+        {"loss_scale_trajectory": [1024.0, 512.0, 512.0, 1024.0],
+         "overflow_steps": 1, "skipped_steps": 1}))
+    report = analyze(str(tmp_path / "j.jsonl"), trace_path=str(trace_path),
+                     metrics_path=str(metrics_path),
+                     precision_path=str(precision_path))
+    text = render(report)
+    assert "## Engine phase time (trace)" in text
+    assert "## Engine metrics (Prometheus snapshot)" in text
+    assert "mean queue wait" in text            # satellite-1 histograms join
+    assert "preemptions:" in text
+    assert "## Precision telemetry" in text
+    assert "loss scale trajectory: start 1024" in text
+    # per-request trace join: decode spans attributed by rid
+    assert "- trace:" in text
+
+
+@pytest.mark.serve
+def test_postmortem_cli_writes_report(chaos, tmp_path, capsys):
+    out = tmp_path / "report.md"
+    assert postmortem_main([chaos["path"], "--out", str(out)]) == 0
+    assert "postmortem report ->" in capsys.readouterr().out
+    assert "# Serve postmortem" in out.read_text()
+
+
+def test_parse_prometheus_roundtrips_escaped_labels():
+    from repro.obs import Registry
+    r = Registry()
+    hostile = 'a "quoted" \\ backslash\nnewline'
+    r.counter("x_total", "h", labels=("msg",)).inc(3, msg=hostile)
+    parsed = parse_prometheus(r.prometheus())
+    assert parsed == {f'x_total{{msg="{hostile}"}}': 3.0}

@@ -152,6 +152,50 @@ def test_registry_snapshot_and_prometheus():
     assert json.loads(r.json_dump()) == snap
 
 
+def test_prometheus_escapes_hostile_label_values():
+    """Exposition escaping: a label value carrying backslashes, quotes,
+    or newlines must not corrupt the scrape document."""
+    r = Registry()
+    c = r.counter("errors_total", "why", labels=("msg",))
+    c.inc(msg='path "C:\\tmp"\nsecond line')
+    prom = r.prometheus()
+    # one sample line (the newline is escaped, not emitted raw)...
+    samples = [ln for ln in prom.splitlines() if not ln.startswith("#")]
+    assert len(samples) == 1
+    # ...with the exposition-format escapes, backslash escaped first
+    assert ('errors_total{msg="path \\"C:\\\\tmp\\"\\nsecond line"} 1'
+            == samples[0])
+    # HELP text escapes backslash + newline too
+    r2 = Registry()
+    r2.counter("x_total", "line one\nline \\two").inc()
+    help_line = r2.prometheus().splitlines()[0]
+    assert help_line == "# HELP x_total line one\\nline \\\\two"
+
+
+def test_merged_prometheus_one_header_per_shared_family():
+    """Registries sharing a metric family merge under a single
+    HELP/TYPE header — Prometheus rejects duplicate family headers."""
+    from repro.obs import merged_prometheus
+    a, b = Registry(), Registry()
+    a.counter("shared_total", "shared fam", labels=("src",)).inc(src="a")
+    b.counter("shared_total", "shared fam", labels=("src",)).inc(2, src="b")
+    a.gauge("only_a").set(1)
+    b.gauge("only_b").set(2)
+    prom = merged_prometheus(a, b)
+    lines = prom.splitlines()
+    assert lines.count("# TYPE shared_total counter") == 1
+    assert lines.count("# HELP shared_total shared fam") == 1
+    # both registries' series survive the merge
+    assert 'shared_total{src="a"} 1' in lines
+    assert 'shared_total{src="b"} 2' in lines
+    assert "only_a 1" in lines and "only_b 2" in lines
+    # a name that changes kind across registries is a schema bug
+    c = Registry()
+    c.gauge("shared_total")
+    with pytest.raises(ValueError, match="one family name, one type"):
+        merged_prometheus(a, c)
+
+
 # --------------------------------------------------------------------------
 # tracer + chrome-trace schema
 # --------------------------------------------------------------------------
@@ -213,6 +257,63 @@ def test_validate_rejects_missing_fields_and_overlap():
     # same intervals on different tracks are fine
     overlap[1]["tid"] = 1
     validate_chrome_trace(overlap)
+
+
+def test_validate_rejects_malformed_event_shapes():
+    """Non-object events and non-numeric timestamps get actionable
+    errors, not KeyError/TypeError."""
+    with pytest.raises(ValueError, match="not a trace-event object"):
+        validate_chrome_trace([["ph", "i"]])
+    with pytest.raises(ValueError, match="ts must be a number"):
+        validate_chrome_trace(
+            [{"ph": "i", "ts": "0", "pid": 0, "tid": 0, "name": "x"}])
+    with pytest.raises(ValueError, match="needs dur"):
+        validate_chrome_trace(
+            [{"ph": "X", "ts": 0, "dur": "5", "pid": 0, "tid": 0,
+              "name": "x"}])
+    with pytest.raises(ValueError, match="needs dur"):
+        validate_chrome_trace(
+            [{"ph": "X", "ts": 0, "dur": -1, "pid": 0, "tid": 0,
+              "name": "x"}])
+
+
+def test_validate_counter_events():
+    """C events need a non-empty dict of numeric series; a valid counter
+    mixed with instants and spans passes."""
+    base = {"ph": "C", "ts": 1, "pid": 0, "tid": 0, "name": "pool"}
+    with pytest.raises(ValueError, match="non-empty args dict"):
+        validate_chrome_trace([dict(base)])                 # args missing
+    with pytest.raises(ValueError, match="non-empty args dict"):
+        validate_chrome_trace([dict(base, args={})])        # args empty
+    with pytest.raises(ValueError, match="must be numeric"):
+        validate_chrome_trace([dict(base, args={"free": "3"})])
+    with pytest.raises(ValueError, match="must be numeric"):
+        validate_chrome_trace([dict(base, args={"free": True})])
+    mixed = [
+        {"ph": "X", "ts": 0, "dur": 10, "pid": 0, "tid": 0, "name": "tick"},
+        {"ph": "i", "ts": 2, "pid": 0, "tid": 0, "name": "admit", "s": "t"},
+        dict(base, args={"free": 3, "used": 2.5}),
+        {"ph": "X", "ts": 4, "dur": 2, "pid": 0, "tid": 0, "name": "plan"},
+    ]
+    assert len(validate_chrome_trace(mixed)) == 4
+
+
+def test_validate_ring_evicted_parent_still_nests():
+    """A ring buffer evicts children before parents (spans are emitted
+    on exit), so an orphaned tail of the stream must still validate."""
+    tr = Tracer(clock=_fake_clock(), max_events=3)
+    with tr.span("tick"):
+        with tr.span("plan"):
+            pass
+        with tr.span("device step"):
+            pass
+        with tr.span("commit"):
+            pass
+    # 4 spans through a 3-slot ring: "plan" (oldest child) evicted, the
+    # surviving suffix has "tick" without one of its children
+    events = [e for e in tr.chrome_trace()["traceEvents"] if e["ph"] == "X"]
+    assert len(events) == 3 and events[-1]["name"] == "tick"
+    validate_chrome_trace(tr.chrome_trace())
 
 
 # --------------------------------------------------------------------------
@@ -340,10 +441,12 @@ def test_prefix_cache_metrics_schema_pinned(params):
 
 
 @pytest.mark.serve
-def test_engine_step_transfers_exactly_two_arrays(monkeypatch, params):
-    """Zero added device syncs: with or without a tracer, one engine step
-    crosses device->host exactly twice (the (B,) accept and token arrays
-    the verifier always produces)."""
+def test_engine_step_transfers_exactly_two_arrays(monkeypatch, params,
+                                                  tmp_path):
+    """Zero added device syncs: with tracer and/or journal enabled, one
+    engine step crosses device->host exactly twice (the (B,) accept and
+    token arrays the verifier always produces)."""
+    from repro.obs import JournalRecorder
     import repro.serve.engine as eng
 
     class CountingNp:
@@ -361,10 +464,15 @@ def test_engine_step_transfers_exactly_two_arrays(monkeypatch, params):
     proxy = CountingNp(np)
     monkeypatch.setattr(eng, "np", proxy)
     counts = {}
-    for label, tracer in (("off", None), ("on", Tracer())):
+    variants = (
+        ("off", None, None),
+        ("tracer", Tracer(), None),
+        ("journal", None, JournalRecorder(str(tmp_path / "pin.jsonl"))),
+    )
+    for label, tracer, journal in variants:
         engine = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
                                    page_size=16, chunk_size=16,
-                                   tracer=tracer)
+                                   tracer=tracer, journal=journal)
         engine.submit([1, 2, 3], max_new=3)
         per_step = []
         while engine.scheduler.has_work:
@@ -372,8 +480,11 @@ def test_engine_step_transfers_exactly_two_arrays(monkeypatch, params):
             engine.step()
             per_step.append(proxy.asarray_calls - before)
         counts[label] = per_step
-        assert all(n == 2 for n in per_step), per_step
-    assert counts["on"] == counts["off"]
+        if journal is not None:
+            journal.close()
+        assert all(n == 2 for n in per_step), (label, per_step)
+    assert counts["tracer"] == counts["off"]
+    assert counts["journal"] == counts["off"]
 
 
 def test_no_blocking_sync_in_serve_hot_path_sources():
@@ -568,3 +679,35 @@ def test_serving_obs_overhead_row_registered():
     """The bench's tracing-overhead row is part of the pinned schema."""
     from benchmarks.serving_bench import expected_row_names
     assert "serving_obs_overhead_pct" in expected_row_names()
+
+
+def test_serving_journal_overhead_row_registered():
+    """The flight-recorder overhead row is part of the pinned schema."""
+    from benchmarks.serving_bench import expected_row_names
+    assert "serving_journal_overhead_pct" in expected_row_names()
+
+
+@pytest.mark.serve
+def test_request_phase_histograms_exported(params):
+    """A drive populates the per-request phase histograms
+    (queue wait / prefill / decode) in the engine's registry."""
+    engine = serve.ServeEngine(CFG, params, n_slots=2, max_seq=64,
+                               page_size=16, chunk_size=16)
+    for p in ragged_prompts(3):
+        engine.submit(p, max_new=4)
+    results = engine.drain()
+    assert len(results) == 3
+    prom = engine.stats.registry.prometheus()
+    for fam in ("serve_queue_wait_seconds", "serve_prefill_seconds",
+                "serve_decode_seconds"):
+        assert f"# TYPE {fam} histogram" in prom
+        assert f"{fam}_count 3" in prom
+    # phases decompose: queue_wait + prefill + decode <= total latency
+    for r in results:
+        m = r.metrics
+        assert m.queue_wait >= 0.0
+        assert m.prefill_seconds >= 0.0
+        assert m.decode_seconds >= 0.0
+        total = m.finish_time - m.submit_time
+        assert (m.queue_wait + m.prefill_seconds + m.decode_seconds
+                <= total + 1e-9)
